@@ -1,0 +1,111 @@
+"""Shared benchmark harness.
+
+Every benchmark module exposes ``run(budget) -> list[Row]``; rows print as
+``name,us_per_call,derived`` CSV.  Budgets: "quick" (CI-sized) and "full"
+(longer CPU runs).  All training here is CPU-scale: the paper's
+*qualitative* claims (instability ordering, clamp mechanism, mitigation
+efficacy, exact format tables) are validated; 35B-token absolute losses
+are out of scope for a single CPU core (see EXPERIMENTS.md header).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import QuantConfig, SpikeDetector, zeta_bound
+from repro.optim import adamw_init, adamw_update, AdamWConfig, sgd_init, \
+    sgd_update
+
+__all__ = ["Row", "emit", "time_fn", "train_simple", "spike_count"]
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+def emit(rows: List[Row]):
+    for r in rows:
+        print(r.csv(), flush=True)
+
+
+def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def train_simple(loss_fn, params, batch_fn, qcfg: QuantConfig, steps: int,
+                 lr: float = 5e-4, optimizer: str = "adam",
+                 grad_clip: float = 0.0, weight_decay: float = 0.0,
+                 track_bias_every: int = 0,
+                 lr_schedule: Optional[Callable] = None) -> Dict[str, list]:
+    """Minimal Adam/SGD loop used by the paper-figure benchmarks.
+
+    loss_fn(params, batch, qcfg) -> (loss, metrics).  Returns history dict
+    with losses, grad norms, and (optionally) the per-step gradient-bias
+    measurements of §5 (norm ratio = lower bound on ‖ζ‖_op, cosine)."""
+    opt_cfg = AdamWConfig(weight_decay=weight_decay, grad_clip=grad_clip)
+    if optimizer == "adam":
+        opt_state = adamw_init(params, opt_cfg)
+    else:
+        opt_state = sgd_init(params)
+
+    grad_fn = jax.jit(jax.value_and_grad(
+        lambda p, b, q: loss_fn(p, b, q)[0]), static_argnums=(2,))
+
+    @jax.jit
+    def adam_step(params, opt_state, grads, lr):
+        return adamw_update(grads, opt_state, params, lr, opt_cfg)
+
+    mom = 0.9 if optimizer == "momentum" else 0.0
+
+    @jax.jit
+    def sgd_step(params, opt_state, grads, lr):
+        return sgd_update(grads, opt_state, params, lr, momentum=mom,
+                          grad_clip=grad_clip)
+
+    hist = {"loss": [], "grad_norm": [], "zeta": [], "cosine": [],
+            "zeta_steps": []}
+    for step in range(steps):
+        batch = batch_fn(step)
+        loss, grads = grad_fn(params, batch, qcfg)
+        if track_bias_every and step % track_bias_every == 0:
+            _, g_exact = grad_fn(params, batch, qcfg.to_fp32())
+            zb = zeta_bound(g_exact, grads)
+            hist["zeta"].append(float(zb["norm_ratio"]))
+            hist["cosine"].append(float(zb["cosine"]))
+            hist["zeta_steps"].append(step)
+        lr_t = lr if lr_schedule is None else float(lr_schedule(step))
+        upd = adam_step if optimizer == "adam" else sgd_step
+        params, opt_state, om = upd(params, opt_state, grads, lr_t)
+        hist["loss"].append(float(loss))
+        hist["grad_norm"].append(float(om["grad_norm"]))
+    hist["final_params"] = params
+    return hist
+
+
+def spike_count(losses: list, factor: float = 100.0, window: int = 64
+                ) -> int:
+    """Paper App. B heuristic: loss_t > factor * recent min (+ NaN/inf)."""
+    det = SpikeDetector(spike_factor=factor, window=window)
+    n = 0
+    for l in losses:
+        n += det.update(l)
+    return n

@@ -1,0 +1,38 @@
+"""Fig. 3 — activation function × layernorm ablation on the proxy.
+
+Paper claims: with LN, GeLU and (especially) SwiGLU destabilize in low
+precision; removing LN stabilizes SwiGLU in low precision (and lowers the
+loss since the teacher has no LN).  Identical seeds across precisions.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import preset
+from repro.models import (ProxyConfig, proxy_batch, proxy_init, proxy_loss,
+                          teacher_init)
+from .common import Row, spike_count, train_simple
+
+
+def run(budget: str = "quick"):
+    steps = 150 if budget == "quick" else 600
+    rows = []
+    for act in ("relu", "gelu", "swiglu"):
+        for use_ln in (True, False):
+            cfg = ProxyConfig(d_model=128, n_layers=4, batch_size=256,
+                              act=act, use_ln=use_ln)
+            teacher = teacher_init(jax.random.PRNGKey(1), cfg)
+            for prec in ("bf16", "mxfp4_e2m1"):
+                student = proxy_init(jax.random.PRNGKey(0), cfg)
+                import time
+                t0 = time.perf_counter()
+                hist = train_simple(
+                    lambda p, b, q: proxy_loss(p, b, cfg, q), student,
+                    lambda s: proxy_batch(s, teacher, cfg), preset(prec),
+                    steps, lr=1e-3)
+                us = (time.perf_counter() - t0) / steps * 1e6
+                rows.append(Row(
+                    f"fig3.{act}.{'ln' if use_ln else 'noln'}.{prec}", us,
+                    f"final_loss={hist['loss'][-1]:.4g} "
+                    f"spikes={spike_count(hist['loss'], 10.0)}"))
+    return rows

@@ -1,0 +1,59 @@
+"""Fig. 5 — E4M3 code-gap table (left), LN-affine last-bin fraction
+(center), activation last-bin fraction (right).
+
+The left panel is *exact* (pure format arithmetic).  Center/right use
+log-normal LN-affine weights (e^mu ~ 1, sigma << 1, the paper's observed
+distribution) and Gaussian-ish activations from a live proxy model.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import E4M3, E5M2, mx_stats, positive_codes, preset
+from repro.models import ProxyConfig, proxy_apply, proxy_init, teacher_init
+from .common import Row, time_fn
+
+
+def run(budget: str = "quick"):
+    rows = []
+    # --- left panel: exact code table --------------------------------------
+    codes = positive_codes(E4M3)
+    gaps = (codes[1:] - codes[:-1]) / codes[:-1]
+    bin_gaps = gaps[(codes[:-1] >= 1.0) & (codes[:-1] < 2.0)]
+    rows.append(Row("fig5.e4m3_codes", 0.0,
+                    f"n={len(codes)} min={codes[0]:.6g} max={codes[-1]:.0f} "
+                    f"gap_hi={bin_gaps[0]*100:.1f}% gap_lo="
+                    f"{bin_gaps[-1]*100:.1f}%"))
+
+    # --- center: clustered log-normal LN weights ---------------------------
+    # Sharper-than-paper characterization: clamping requires the cluster to
+    # sit in the top ~12.5% of an octave (|v| > 0.875·2^k, Eq. 10).  The
+    # paper's observed LN scales (~0.89) do; clusters near 1.0-1.7 do not.
+    rng = np.random.RandomState(0)
+    for mu in (0.9, 1.02, 1.5):
+        for sigma in (0.1, 0.01):
+            w = (mu * np.exp(rng.normal(0.0, sigma, 4096))
+                 ).astype(np.float32)
+            t = time_fn(lambda w=w: mx_stats(jnp.asarray(w), E4M3), iters=5)
+            s = mx_stats(jnp.asarray(w), E4M3)
+            rows.append(Row(
+                f"fig5.ln_lognormal_mu{mu}_sigma{sigma}", t,
+                f"last_bin={float(s['last_bin_frac']):.3f} "
+                f"tight_blocks={float(s['tight_block_frac']):.3f}"))
+
+    # --- right: live proxy activations -------------------------------------
+    cfg = ProxyConfig(d_model=128, n_layers=3, batch_size=128)
+    student = proxy_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 128))
+    # collect the LN input of layer 0 and quantize-stat it
+    acts = proxy_apply(student, x, cfg, preset("bf16"))
+    s = mx_stats(acts.reshape(-1), E4M3)
+    rows.append(Row("fig5.proxy_act_last_bin", 0.0,
+                    f"last_bin={float(s['last_bin_frac']):.4f} "
+                    f"(paper: ~1% synthetic, ~0.5% OLMo)"))
+    s5 = mx_stats(acts.reshape(-1), E5M2)
+    rows.append(Row("fig5.proxy_act_last_bin_e5m2", 0.0,
+                    f"last_bin={float(s5['last_bin_frac']):.4f}"))
+    return rows

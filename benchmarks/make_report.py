@@ -1,0 +1,95 @@
+"""Render the §Dry-run and §Roofline markdown tables from dry-run JSONs.
+
+  PYTHONPATH=src python -m benchmarks.make_report [--dir experiments/dryrun]
+
+Writes experiments/dryrun_table.md and experiments/roofline_table.md
+(pasted into EXPERIMENTS.md) and prints a summary.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import all_cells
+from .roofline import analyze_record
+
+
+def load(dryrun_dir):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def dryrun_table(recs):
+    lines = ["| arch | shape | mesh | status | GiB/dev | compile_s | "
+             "collectives (GiB/dev/step: AR/AG/RS/A2A/CP) |",
+             "|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"],
+                                         r.get("tag", ""))):
+        if r.get("tag"):
+            continue  # baseline table only
+        gib = r.get("bytes_per_device", 0) / 2 ** 30
+        h = r.get("hlo", {})
+        coll = "/".join(
+            f"{h.get(f'coll_{k}_bytes', 0)/2**30:.2f}"
+            for k in ("all_reduce", "all_gather", "reduce_scatter",
+                      "all_to_all", "collective_permute")) if h else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} | "
+            f"{gib:.2f} | {r.get('compile_s', '-')} | {coll} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh="pod16x16", precision="mxfp8_e4m3"):
+    recs = [r for r in recs if r.get("precision") == precision]
+    lines = ["| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+             "bottleneck | useful FLOPs ratio | roofline_frac | fits 16G |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    skips = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != mesh or r.get("tag"):
+            continue
+        if r["status"] == "skip":
+            skips.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip ({r.get('reason','')[:40]}…) | — | — | — |")
+            continue
+        a = analyze_record(r)
+        if not a:
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | |")
+            continue
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute_s']*1e3:.2f} | "
+            f"{a['t_memory_s']*1e3:.2f} | {a['t_collective_s']*1e3:.2f} | "
+            f"{a['bottleneck']} | {a['useful_flops_ratio']:.3f} | "
+            f"{a['roofline_frac']:.3f} | "
+            f"{'yes' if a['fits_16g'] else 'NO'} |")
+    return "\n".join(lines + skips)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/dryrun_table.md", "w") as f:
+        f.write(dryrun_table(recs) + "\n")
+    with open("experiments/roofline_table.md", "w") as f:
+        f.write(roofline_table(recs) + "\n")
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skip" for r in recs)
+    n_fail = sum(r["status"] == "fail" for r in recs)
+    print(f"cells: ok={n_ok} skip={n_skip} fail={n_fail}")
+    for r in recs:
+        if r["status"] == "fail":
+            print("FAIL", r["arch"], r["shape"], r["mesh"],
+                  r.get("error", "")[:120])
+    print("wrote experiments/dryrun_table.md, experiments/roofline_table.md")
+
+
+if __name__ == "__main__":
+    main()

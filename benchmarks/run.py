@@ -1,0 +1,63 @@
+"""Benchmark runner — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--budget quick|full]
+                                          [--only fig5,table1,...]
+
+Prints ``name,us_per_call,derived`` CSV (task spec format).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (fig1_llm_instability, fig2_lr_sweep, fig3_act_ln,
+               fig4_grad_bias, fig5_codes_clamp, fig6_mitigations,
+               fig7_interventions, fig9_depth_width, fig10_optim_init,
+               kernel_microbench, roofline, table1_mitigated_loss,
+               table2_scaling_law)
+from .common import emit, Row
+
+BENCHES = {
+    "fig5": fig5_codes_clamp,          # cheap & exact first
+    "kernel": kernel_microbench,
+    "fig4": fig4_grad_bias,
+    "fig2": fig2_lr_sweep,
+    "fig3": fig3_act_ln,
+    "fig6": fig6_mitigations,
+    "fig7": fig7_interventions,
+    "fig9": fig9_depth_width,
+    "fig10": fig10_optim_init,
+    "fig1": fig1_llm_instability,
+    "table1": table1_mitigated_loss,
+    "table2": table2_scaling_law,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", default="quick", choices=["quick", "full"])
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        mod = BENCHES[name]
+        t0 = time.time()
+        try:
+            rows = mod.run(args.budget)
+            emit(rows)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            emit([Row(f"{name}.ERROR", 0.0,
+                      f"{type(e).__name__}: {str(e)[:160]}")])
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Paper Fig. 7 live: avert an MX divergence with a mid-training
+precision intervention, driven by the fault-tolerant Trainer.
+
+  PYTHONPATH=src python examples/intervention_demo.py
+
+Phase 1 trains a proxy model under an aggressive low-precision config until
+the spike watchdog fires; the Trainer rolls back to the last checkpoint,
+applies the `bf16_activations` intervention (the paper's strongest
+immediate stabilizer), and finishes training stably.
+"""
+import sys
+import tempfile
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.core import preset
+from repro.models import (ProxyConfig, proxy_batch, proxy_init, proxy_loss,
+                          teacher_init)
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    cfg = ProxyConfig(d_model=128, n_layers=4, batch_size=256)
+    teacher = teacher_init(jax.random.PRNGKey(1), cfg)
+    student = proxy_init(jax.random.PRNGKey(0), cfg)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tcfg = TrainerConfig(
+            total_steps=240, peak_lr=3e-3, init_lr=3e-3, end_lr=3e-3,
+            warmup_frac=0.0, ckpt_dir=ckpt_dir, ckpt_every=20,
+            spike_factor=20.0, grad_factor=25.0,
+            auto_intervention="bf16_activations")
+        trainer = Trainer(
+            loss_fn=lambda p, b, q: proxy_loss(p, b, cfg, q),
+            params=student, qcfg=preset("mxfp4_e2m1"),
+            batch_fn=lambda s: proxy_batch(s, teacher, cfg),
+            tcfg=tcfg)
+        hist = trainer.run(240)
+        for rec in hist[::20]:
+            print(f"  step {rec['step']:>4} loss {rec['loss']:.5f} "
+                  f"gnorm {rec['grad_norm']:.3f}")
+        print("\nevents:")
+        for e in trainer.events:
+            print(f"  {e}")
+        if not trainer.events:
+            print("  (no divergence at this scale/seed — rerun with "
+                  "--steps or a lower-bit preset; the machinery is "
+                  "exercised in tests/test_train.py regardless)")
+        print(f"\nfinal precision: {trainer.qcfg.describe()}")
+        print(f"final loss: {hist[-1]['loss']:.5f}")
+
+
+if __name__ == "__main__":
+    main()

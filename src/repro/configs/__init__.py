@@ -1,0 +1,6 @@
+"""Architecture configs (one module per assigned arch) + shape cells."""
+from .base import get_config, list_archs
+from .shapes import SHAPES, Shape, all_cells, input_specs, supported
+
+__all__ = ["get_config", "list_archs", "SHAPES", "Shape", "all_cells",
+           "input_specs", "supported"]

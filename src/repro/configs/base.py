@@ -1,0 +1,45 @@
+"""Config registry: every assigned architecture + the paper's own family.
+
+Each ``src/repro/configs/<arch>.py`` registers a FULL config (the exact
+assigned public-literature configuration, exercised only via the dry-run)
+and a SMOKE config (same family, reduced: thin layers, few experts, tiny
+vocab) that runs a real forward/backward step on CPU in tests.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from repro.models import LMConfig
+
+_REGISTRY: Dict[str, Dict[str, Callable[[], LMConfig]]] = {}
+
+
+def register(name: str, full: Callable[[], LMConfig],
+             smoke: Callable[[], LMConfig]) -> None:
+    _REGISTRY[name] = {"full": full, "smoke": smoke}
+
+
+def get_config(name: str, variant: str = "full") -> LMConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; know {sorted(_REGISTRY)}")
+    return _REGISTRY[name][variant]()
+
+
+def list_archs():
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    from . import (moonshot_v1_16b_a3b, deepseek_v2_236b, recurrentgemma_9b,  # noqa
+                   qwen2_7b, starcoder2_3b, stablelm_3b, yi_34b,
+                   internvl2_26b, seamless_m4t_large_v2, xlstm_1_3b,
+                   olmo_paper)
+    _LOADED = True

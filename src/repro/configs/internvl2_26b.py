@@ -1,0 +1,32 @@
+"""internvl2-26b  [vlm]  (arXiv:2404.16821).
+
+LM backbone (InternLM2-20B): 48L d_model=6144 48H (GQA kv=8, d_head=128)
+d_ff=16384 vocab=92553, SwiGLU, RMSNorm.  The InternViT frontend is a STUB
+per the task spec: input_specs() provides precomputed patch embeddings
+(1024 visual tokens) that are projected and prepended to the text tokens.
+"""
+from repro.models import LMConfig
+from .base import register
+
+N_PATCHES = 1024
+
+
+def full() -> LMConfig:
+    return LMConfig(
+        name="internvl2-26b", n_layers=48, d_model=6144, n_heads=48,
+        n_kv_heads=8, d_head=128, d_ff=16384, vocab=92553, act="swiglu",
+        norm="rmsnorm", frontend="patch", n_frontend_tokens=N_PATCHES,
+        rope_theta=1e6,
+    )
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="internvl2-26b-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_head=16, d_ff=128, vocab=512, act="swiglu",
+        norm="rmsnorm", frontend="patch", n_frontend_tokens=16,
+        loss_chunk=128,
+    )
+
+
+register("internvl2-26b", full, smoke)

@@ -1,0 +1,26 @@
+"""qwen2-7b  [dense]  (arXiv:2407.10671).
+
+28L d_model=3584 28H (GQA kv=4, d_head=128) d_ff=18944 vocab=152064,
+SwiGLU, RMSNorm, QKV bias, rope theta 1e6.
+"""
+from repro.models import LMConfig
+from .base import register
+
+
+def full() -> LMConfig:
+    return LMConfig(
+        name="qwen2-7b", n_layers=28, d_model=3584, n_heads=28,
+        n_kv_heads=4, d_head=128, d_ff=18944, vocab=152064, act="swiglu",
+        norm="rmsnorm", qkv_bias=True, rope_theta=1e6,
+    )
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="qwen2-7b-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_head=16, d_ff=160, vocab=512, act="swiglu",
+        norm="rmsnorm", qkv_bias=True, loss_chunk=128,
+    )
+
+
+register("qwen2-7b", full, smoke)

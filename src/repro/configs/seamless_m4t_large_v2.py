@@ -1,0 +1,30 @@
+"""seamless-m4t-large-v2  [audio]  (arXiv:2308.11596).
+
+Encoder-decoder backbone: 24 encoder + 24 decoder layers, d_model=1024,
+16H (kv=16, d_head=64), d_ff=8192, vocab=256206, GeLU, LayerNorm.  The
+speech frontend is a STUB per the task spec: input_specs() provides
+precomputed frame embeddings (B, T, d_model) consumed by the encoder;
+the text decoder cross-attends to the encoder output.
+"""
+from repro.models import LMConfig
+from .base import register
+
+
+def full() -> LMConfig:
+    return LMConfig(
+        name="seamless-m4t-large-v2", n_layers=24, enc_layers=24,
+        d_model=1024, n_heads=16, n_kv_heads=16, d_head=64, d_ff=8192,
+        vocab=256206, act="gelu", norm="layernorm", frontend="frames",
+    )
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="seamless-m4t-large-v2-smoke", n_layers=2, enc_layers=2,
+        d_model=64, n_heads=4, n_kv_heads=4, d_head=16, d_ff=128,
+        vocab=512, act="gelu", norm="layernorm", frontend="frames",
+        loss_chunk=128,
+    )
+
+
+register("seamless-m4t-large-v2", full, smoke)

@@ -1,0 +1,102 @@
+"""Assigned input-shape cells and ShapeDtypeStruct input specs.
+
+  train_4k     seq=4,096    global_batch=256   (training step)
+  prefill_32k  seq=32,768   global_batch=32    (inference prefill)
+  decode_32k   seq=32,768   global_batch=128   (one-token decode w/ cache)
+  long_500k    seq=524,288  global_batch=1     (long-context decode)
+
+`long_500k` needs sub-quadratic sequence mixing: it runs for the
+hybrid/SSM archs (recurrentgemma-9b: bounded local window + O(1) RG-LRU
+state; xlstm-1.3b: O(1) recurrent state) and is SKIPPED for the 8 pure
+full-attention archs (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import LMConfig, init_cache
+
+__all__ = ["Shape", "SHAPES", "supported", "input_specs", "all_cells"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq: int
+    batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+ENC_LEN_DECODE = 4096    # encoder context length for enc-dec decode cells
+
+
+def _subquadratic(cfg: LMConfig) -> bool:
+    kinds = set(cfg.block_pattern)
+    has_rnn = kinds & {"rec", "mlstm", "slstm"}
+    attn_bounded = ("attn" not in kinds) or cfg.window > 0
+    return bool(has_rnn) and attn_bounded
+
+
+def supported(cfg: LMConfig, shape_name: str) -> Tuple[bool, str]:
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not _subquadratic(cfg):
+        return False, "full-attention arch: O(T^2)/O(T) state at 500k " \
+                      "(skip per task spec; see DESIGN.md §4)"
+    return True, ""
+
+
+def input_specs(cfg: LMConfig, shape_name: str) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell.
+
+    train/prefill: the batch dict.  decode: {"tok", "pos", "cache"
+    [, "enc_out"]}.  No device allocation happens here."""
+    shape = SHAPES[shape_name]
+    B, S = shape.batch, shape.seq
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    sd = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "patch":
+            n_text = S - cfg.n_frontend_tokens
+            specs = {"tokens": sd((B, n_text), i32),
+                     "labels": sd((B, n_text), i32),
+                     "patch_embeds": sd((B, cfg.n_frontend_tokens,
+                                         cfg.d_model), bf16)}
+        elif cfg.frontend == "frames":
+            specs = {"tokens": sd((B, S), i32), "labels": sd((B, S), i32),
+                     "frames": sd((B, S, cfg.d_model), bf16)}
+        else:
+            specs = {"tokens": sd((B, S), i32), "labels": sd((B, S), i32)}
+        return specs
+    # decode
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    specs = {"tok": sd((B, 1), i32), "pos": sd((), i32), "cache": cache}
+    if cfg.enc_layers:
+        specs["enc_out"] = sd((B, ENC_LEN_DECODE, cfg.d_model), bf16)
+    return specs
+
+
+def all_cells():
+    """Every (arch, shape) cell with its supported/skip status."""
+    from .base import get_config, list_archs
+    cells = []
+    for arch in list_archs():
+        if arch == "olmo-paper":
+            continue          # the paper's own family: not an assigned cell
+        cfg = get_config(arch)
+        for shape_name in SHAPES:
+            ok, reason = supported(cfg, shape_name)
+            cells.append({"arch": arch, "shape": shape_name,
+                          "supported": ok, "reason": reason})
+    return cells

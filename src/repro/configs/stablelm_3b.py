@@ -1,0 +1,27 @@
+"""stablelm-3b  [dense]  (hf:stabilityai/stablelm family).
+
+32L d_model=2560 32H (MHA kv=32, d_head=80) d_ff=6912 vocab=50304,
+SwiGLU, LayerNorm, partial-rotary handled as full RoPE (stub deviation
+noted in DESIGN.md).
+"""
+from repro.models import LMConfig
+from .base import register
+
+
+def full() -> LMConfig:
+    return LMConfig(
+        name="stablelm-3b", n_layers=32, d_model=2560, n_heads=32,
+        n_kv_heads=32, d_head=80, d_ff=6912, vocab=50304, act="swiglu",
+        norm="layernorm", rope_theta=1e4,
+    )
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="stablelm-3b-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_head=16, d_ff=128, vocab=512, act="swiglu",
+        norm="layernorm", loss_chunk=128,
+    )
+
+
+register("stablelm-3b", full, smoke)

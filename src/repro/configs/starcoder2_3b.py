@@ -1,0 +1,26 @@
+"""starcoder2-3b  [dense]  (arXiv:2402.19173).
+
+30L d_model=3072 24H (GQA kv=2, d_head=128) d_ff=12288 vocab=49152,
+GeLU MLP, LayerNorm, biases, RoPE.
+"""
+from repro.models import LMConfig
+from .base import register
+
+
+def full() -> LMConfig:
+    return LMConfig(
+        name="starcoder2-3b", n_layers=30, d_model=3072, n_heads=24,
+        n_kv_heads=2, d_head=128, d_ff=12288, vocab=49152, act="gelu",
+        norm="layernorm", qkv_bias=True, rope_theta=1e5,
+    )
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="starcoder2-3b-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_head=16, d_ff=128, vocab=512, act="gelu",
+        norm="layernorm", qkv_bias=True, loss_chunk=128,
+    )
+
+
+register("starcoder2-3b", full, smoke)

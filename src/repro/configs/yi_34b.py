@@ -1,0 +1,27 @@
+"""yi-34b  [dense]  (arXiv:2403.04652).
+
+60L d_model=7168 56H (GQA kv=8, d_head=128) d_ff=20480 vocab=64000,
+llama-arch: SwiGLU, RMSNorm, rope theta 5e6.  Largest dense arch in the
+pool — primary LN-affine clamp-monitoring target.
+"""
+from repro.models import LMConfig
+from .base import register
+
+
+def full() -> LMConfig:
+    return LMConfig(
+        name="yi-34b", n_layers=60, d_model=7168, n_heads=56,
+        n_kv_heads=8, d_head=128, d_ff=20480, vocab=64000, act="swiglu",
+        norm="rmsnorm", rope_theta=5e6,
+    )
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="yi-34b-smoke", n_layers=2, d_model=64, n_heads=8,
+        n_kv_heads=2, d_head=8, d_ff=192, vocab=512, act="swiglu",
+        norm="rmsnorm", loss_chunk=128,
+    )
+
+
+register("yi-34b", full, smoke)

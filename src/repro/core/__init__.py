@@ -1,0 +1,20 @@
+"""MX block-scaled quantization core (the paper's primary contribution)."""
+from .formats import (BF16, E2M1, E2M3, E3M2, E4M3, E5M2, FORMATS,
+                      ElementFormat, get_format, positive_codes,
+                      quantize_elem)
+from .mx import MX_BLOCK, mx_stats, quantize_mx
+from .qconfig import (INTERVENTIONS, PRESETS, QuantConfig, apply_intervention,
+                      preset)
+from .qlinear import qdot_attn, qeinsum_bmm, qmatmul
+from .diagnostics import (GradBiasStats, SpikeDetector, grad_bias_probe,
+                          ln_clamp_stats, zeta_bound)
+
+__all__ = [
+    "BF16", "E2M1", "E2M3", "E3M2", "E4M3", "E5M2", "FORMATS",
+    "ElementFormat", "get_format", "positive_codes", "quantize_elem",
+    "MX_BLOCK", "mx_stats", "quantize_mx",
+    "INTERVENTIONS", "PRESETS", "QuantConfig", "apply_intervention", "preset",
+    "qdot_attn", "qeinsum_bmm", "qmatmul",
+    "GradBiasStats", "SpikeDetector", "grad_bias_probe", "ln_clamp_stats",
+    "zeta_bound",
+]

@@ -1,0 +1,124 @@
+"""Instability diagnostics: gradient-bias probe, ζ-norm bound, spike detector.
+
+Implements the paper's §5 measurement methodology:
+
+  ε_t = g̃_t − ḡ_t        (Eq. 2; g̃ = low-precision grad, ḡ = exact grad)
+  ‖ζ_t‖_op ≥ ‖ε_t‖₂ / ‖ḡ_t‖₂   (lower bound inferred from Eq. 4)
+
+with divergence empirically following once the running bound ≈ 2 (Fig. 4),
+plus the clamp-fraction monitors of §6.1 (Fig. 5 center/right) and the
+loss-spike heuristic of App. B (loss_t > 100 × loss_{t−1}).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .mx import mx_stats
+from .qconfig import QuantConfig
+
+__all__ = ["grad_bias_probe", "GradBiasStats", "SpikeDetector",
+           "ln_clamp_stats", "zeta_bound"]
+
+
+@dataclasses.dataclass
+class GradBiasStats:
+    norm_ratio: float     # ‖ε‖/‖ḡ‖  — lower bound on ‖ζ‖_op
+    cosine: float         # cos(g̃, ḡ)
+    g_norm: float
+    gq_norm: float
+
+
+def _flat(tree) -> jax.Array:
+    leaves = [jnp.ravel(l).astype(jnp.float32) for l in jax.tree.leaves(tree)]
+    return jnp.concatenate(leaves)
+
+
+def zeta_bound(g_exact, g_quant) -> Dict[str, jax.Array]:
+    """Norm ratio and cosine between exact and low-precision gradients."""
+    ge, gq = _flat(g_exact), _flat(g_quant)
+    eps = gq - ge
+    gn = jnp.linalg.norm(ge)
+    ratio = jnp.linalg.norm(eps) / jnp.maximum(gn, 1e-30)
+    cos = jnp.vdot(gq, ge) / jnp.maximum(
+        jnp.linalg.norm(gq) * gn, 1e-30)
+    return {"norm_ratio": ratio, "cosine": cos, "g_norm": gn,
+            "gq_norm": jnp.linalg.norm(gq)}
+
+
+def grad_bias_probe(grad_fn: Callable, params, batch,
+                    qcfg: QuantConfig) -> Dict[str, jax.Array]:
+    """Evaluate exact (bf16, unquantized) vs MX gradients *at the same point*.
+
+    ``grad_fn(params, batch, qcfg) -> grads``.  This is the within-trajectory
+    variant of the paper's Fig. 4 measurement: both gradients are taken at
+    identical parameters and batch, so the deviation is attributable purely
+    to quantization (the paper's two-trajectory protocol is available in
+    benchmarks/fig4_grad_bias.py as well).
+    """
+    g_exact = grad_fn(params, batch, qcfg.to_fp32())
+    g_quant = grad_fn(params, batch, qcfg)
+    return zeta_bound(g_exact, g_quant)
+
+
+def ln_clamp_stats(params, qcfg: QuantConfig,
+                   match: str = "ln") -> Dict[str, jax.Array]:
+    """Last-bin / tight-block fractions for every layernorm affine tensor.
+
+    Walks the param pytree, selects leaves whose path contains ``match``
+    (layernorm scales), and reports the paper's Fig. 5-center quantities.
+    """
+    fmt = qcfg.ln_fmt or qcfg.a_fwd
+    out = {}
+    if fmt is None:
+        return out
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        if match in name.lower() and leaf.ndim >= 1:
+            s = mx_stats(leaf.reshape(-1), fmt, axis=-1, block=qcfg.block,
+                         scale_mode=qcfg.scale_mode)
+            out[name] = s
+    return out
+
+
+class SpikeDetector:
+    """Loss-spike watchdog (paper App. B heuristic + grad-norm growth).
+
+    Flags a spike when ``loss_t > spike_factor * min(recent losses)`` or the
+    gradient norm exceeds ``grad_factor ×`` its running median.  Purely
+    host-side (consumes floats), so it composes with any train loop.
+    """
+
+    def __init__(self, spike_factor: float = 100.0, grad_factor: float = 50.0,
+                 window: int = 64):
+        self.spike_factor = spike_factor
+        self.grad_factor = grad_factor
+        self.window = window
+        self._losses: list = []
+        self._gnorms: list = []
+        self.n_spikes = 0
+
+    def update(self, loss: float, grad_norm: Optional[float] = None) -> bool:
+        import math
+        spiked = False
+        if not math.isfinite(loss):
+            spiked = True
+        if self._losses:
+            ref = min(self._losses[-self.window:])
+            if loss > self.spike_factor * ref:
+                spiked = True
+        if grad_norm is not None and len(self._gnorms) >= 8:
+            med = sorted(self._gnorms[-self.window:])[
+                len(self._gnorms[-self.window:]) // 2]
+            if grad_norm > self.grad_factor * max(med, 1e-30):
+                spiked = True
+        if math.isfinite(loss):
+            self._losses.append(loss)
+        if grad_norm is not None and math.isfinite(grad_norm):
+            self._gnorms.append(grad_norm)
+        self.n_spikes += int(spiked)
+        return spiked

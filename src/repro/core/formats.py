@@ -1,0 +1,177 @@
+"""Element formats for Microscaling (MX) block-scaled quantization.
+
+Implements the OCP MX element data types used by the paper:
+FP8 (E4M3, E5M2), FP6 (E2M3, E3M2), FP4 (E2M1), plus the E8M0 shared-scale
+range.  Matches the conventions of Rouhani et al. (2023) / Darvish Rouhani
+et al. (2023a) as reviewed in the paper's Appendix A and Section 6.1:
+
+  * E4M3: max normal 448 (S.1111.110; S.1111.111 reserved for NaN),
+    126 positive codes, e_max = 8, subnormals down to 2^-9.
+  * E5M2: IEEE-like (has inf/nan), max normal 57344, e_max = 15.
+  * E2M3 / E3M2 / E2M1: no inf/nan codes; max normals 7.5 / 28 / 6.
+
+All casts round half-to-even (the MX emulation library default) and clamp
+overflowing magnitudes to the largest representable normal, which is the
+mechanism behind the paper's Eq. (10) "last quantization bin" clamping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ElementFormat", "E4M3", "E5M2", "E2M3", "E3M2", "E2M1", "BF16",
+    "FORMATS", "get_format", "quantize_elem", "floor_log2", "exp2_int",
+    "positive_codes", "SCALE_EMIN", "SCALE_EMAX",
+]
+
+# E8M0 shared-scale exponent range (code 255 = NaN is excluded).
+SCALE_EMIN = -127
+SCALE_EMAX = 127
+
+
+@dataclasses.dataclass(frozen=True)
+class ElementFormat:
+    """A low-precision floating-point element format.
+
+    Attributes:
+      name: short identifier, e.g. "e4m3".
+      ebits/mbits: exponent / explicit-mantissa bit counts.
+      bias: exponent bias.
+      max_normal: largest representable finite magnitude.
+      has_inf_nan: whether the format reserves codes for inf/nan
+        (E5M2 IEEE-like; E4M3 reserves only one NaN mantissa pattern).
+    """
+
+    name: str
+    ebits: int
+    mbits: int
+    bias: int
+    max_normal: float
+    has_inf_nan: bool
+
+    @property
+    def min_normal_exp(self) -> int:
+        """Exponent of the smallest normal number (1 - bias)."""
+        return 1 - self.bias
+
+    @property
+    def min_normal(self) -> float:
+        return 2.0 ** self.min_normal_exp
+
+    @property
+    def min_subnormal(self) -> float:
+        return 2.0 ** (self.min_normal_exp - self.mbits)
+
+    @property
+    def e_max(self) -> int:
+        """Exponent of the largest normal number (Algorithm 1's e_max_elem)."""
+        return int(np.floor(np.log2(self.max_normal)))
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.ebits + self.mbits
+
+    def __repr__(self) -> str:  # keep config reprs short
+        return f"ElementFormat({self.name})"
+
+
+# --- The MX element formats -------------------------------------------------
+E4M3 = ElementFormat("e4m3", ebits=4, mbits=3, bias=7, max_normal=448.0,
+                     has_inf_nan=False)   # one NaN code only; no inf
+E5M2 = ElementFormat("e5m2", ebits=5, mbits=2, bias=15, max_normal=57344.0,
+                     has_inf_nan=True)
+E3M2 = ElementFormat("e3m2", ebits=3, mbits=2, bias=3, max_normal=28.0,
+                     has_inf_nan=False)
+E2M3 = ElementFormat("e2m3", ebits=2, mbits=3, bias=1, max_normal=7.5,
+                     has_inf_nan=False)
+E2M1 = ElementFormat("e2m1", ebits=2, mbits=1, bias=1, max_normal=6.0,
+                     has_inf_nan=False)
+
+#: Sentinel for "no element quantization" (operand stays bfloat16).
+BF16: Optional[ElementFormat] = None
+
+FORMATS = {f.name: f for f in (E4M3, E5M2, E3M2, E2M3, E2M1)}
+FORMATS["bf16"] = None
+
+
+def get_format(name: Optional[str]) -> Optional[ElementFormat]:
+    if name is None:
+        return None
+    key = name.lower()
+    if key not in FORMATS:
+        raise KeyError(f"unknown element format {name!r}; know {sorted(FORMATS)}")
+    return FORMATS[key]
+
+
+def exp2_int(e: jax.Array) -> jax.Array:
+    """Exact ``2.0**e`` for integer ``e`` via exponent-field construction.
+
+    ``jnp.exp2`` is NOT exactly correctly rounded on all backends (XLA CPU
+    computes exp2(13.0) ≈ 8192.004), which would put quantized values off
+    the element grid; building the float from its exponent field is exact.
+    ``e`` is clipped to the fp32 normal range [-126, 127].
+    """
+    e = jnp.clip(e.astype(jnp.int32), -126, 127)
+    bits = ((e + 127).astype(jnp.uint32)) << 23
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def floor_log2(x: jax.Array) -> jax.Array:
+    """floor(log2(|x|)) for positive finite fp32 via exponent-field extraction.
+
+    Exact for all normal fp32 inputs (no libm rounding hazards at powers of
+    two).  fp32 subnormal inputs report -127, which downstream clamping to the
+    E8M0 range treats as "effectively zero" — the same behavior the hardware
+    scale computation has.
+    """
+    xf = x.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(xf, jnp.uint32)
+    e = ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32) - 127
+    return e
+
+
+def quantize_elem(x: jax.Array, fmt: ElementFormat) -> jax.Array:
+    """Round ``x`` (already divided by the shared scale) onto ``fmt``'s grid.
+
+    Round-half-to-even within the exponent bin; magnitudes above
+    ``fmt.max_normal`` are clamped to ``±max_normal`` (the paper's overflow /
+    "last bin" behavior, Eq. 10); magnitudes below the subnormal quantum
+    round to zero.  Computed in fp32.
+    """
+    xf = x.astype(jnp.float32)
+    mag = jnp.abs(xf)
+    e = floor_log2(jnp.where(mag > 0, mag, 1.0))
+    # Below the normal range the quantum is fixed at the subnormal quantum.
+    e = jnp.maximum(e, fmt.min_normal_exp)
+    quantum = exp2_int(e - fmt.mbits)
+    q = jnp.round(xf / quantum) * quantum
+    q = jnp.clip(q, -fmt.max_normal, fmt.max_normal)
+    q = jnp.where(mag > 0, q, 0.0)
+    # Preserve non-finite inputs (propagate like the emulation library).
+    q = jnp.where(jnp.isfinite(xf), q, xf)
+    return q.astype(x.dtype)
+
+
+def positive_codes(fmt: ElementFormat) -> np.ndarray:
+    """All representable positive magnitudes of ``fmt``, ascending (numpy).
+
+    For E4M3 this yields 126 codes from 2^-9 up to 448, reproducing the
+    paper's Fig. 5 (left) relative-gap table exactly.
+    """
+    codes = []
+    # Subnormals: mantissa 1..2^m - 1 at exponent (1 - bias).
+    for m in range(1, 2 ** fmt.mbits):
+        codes.append(m * fmt.min_subnormal)
+    # Normals.
+    e_min, e_max = fmt.min_normal_exp, fmt.e_max
+    for e in range(e_min, e_max + 1):
+        for m in range(2 ** fmt.mbits):
+            v = (1.0 + m / 2 ** fmt.mbits) * 2.0 ** e
+            if v <= fmt.max_normal:
+                codes.append(v)
+    return np.asarray(sorted(codes), dtype=np.float64)

@@ -1,0 +1,110 @@
+"""MX-quantized matmul primitives with configurable fwd/bwd quantization.
+
+The paper applies MX quantization "dynamically to the inputs of matrix
+multiplication operations ... across both the forward and backward passes,
+with results dequantized to a higher precision format after the operation"
+(§2.1).  `qmatmul` implements exactly that with a `jax.custom_vjp`:
+
+  forward : y  = Q[a_fwd](x) · Q[w_fwd](W)    blocks along K (contraction)
+  dgrad   : dx = Q[g_bwd](dy) · Q[w_bwd](W)ᵀ  blocks along N (contraction)
+  wgrad   : dW = Q[a_bwd](x)ᵀ · Q[g_bwd](dy)  blocks along T (contraction)
+
+Each GEMM quantizes its operands along *its own* contraction axis so the
+shared scales factor out of every dot product (App. A).  Residuals keep the
+un-quantized bf16 tensors, so "forward-only" quantization degrades to the
+straight-through estimator the paper's mitigation (2) uses.
+
+Accumulation is fp32 (`preferred_element_type`), matching MXU semantics.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .mx import quantize_mx
+from .qconfig import QuantConfig
+
+__all__ = ["qmatmul", "qeinsum_bmm", "qdot_attn"]
+
+
+def _mm(a: jax.Array, b: jax.Array, out_dtype) -> jax.Array:
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def qmatmul(x: jax.Array, w: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """``x @ w`` with MX quantization per ``cfg``.  x: (..., K), w: (K, N)."""
+    y, _ = _qmatmul_fwd(x, w, cfg)
+    return y
+
+
+def _qmatmul_fwd(x, w, cfg: QuantConfig):
+    xq = quantize_mx(x, cfg.a_fwd, axis=-1, block=cfg.block,
+                     scale_mode=cfg.scale_mode)
+    wq = quantize_mx(w, cfg.w_fwd, axis=0, block=cfg.block,
+                     scale_mode=cfg.scale_mode)
+    y = _mm(xq, wq, x.dtype)
+    return y, (x, w)
+
+
+def _qmatmul_bwd(cfg: QuantConfig, res, dy):
+    x, w = res
+    kdim, ndim = w.shape
+    dyf = dy.reshape(-1, ndim)
+    xf = x.reshape(-1, kdim)
+    if cfg.quantize_bwd:
+        # dgrad: contraction over N.
+        dyq = quantize_mx(dy, cfg.g_bwd, axis=-1, block=cfg.block,
+                          scale_mode=cfg.scale_mode)
+        wq = quantize_mx(w, cfg.w_bwd, axis=1, block=cfg.block,
+                         scale_mode=cfg.scale_mode)
+        dx = _mm(dyq, wq.T, x.dtype)
+        # wgrad: contraction over tokens.
+        xq = quantize_mx(xf, cfg.a_bwd, axis=0, block=cfg.block,
+                         scale_mode=cfg.scale_mode)
+        dyq2 = quantize_mx(dyf, cfg.g_bwd, axis=0, block=cfg.block,
+                           scale_mode=cfg.scale_mode)
+        dw = _mm(xq.T, dyq2, w.dtype)
+    else:
+        dx = _mm(dy, w.T, x.dtype)
+        dw = _mm(xf.T, dyf, w.dtype)
+    return dx, dw
+
+
+qmatmul.defvjp(_qmatmul_fwd, _qmatmul_bwd)
+
+
+def qeinsum_bmm(x: jax.Array, w: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Batched ``(..., B, M, K) @ (B, K, N)`` used for per-expert GEMMs.
+
+    vmaps :func:`qmatmul` over the leading expert/batch axis so every
+    per-expert GEMM gets its own block scales along its contraction axis.
+    """
+    assert w.ndim == 3 and x.ndim >= 3
+    lead = x.shape[:-3]
+    xf = x.reshape((-1,) + x.shape[-3:]) if lead else x[None]
+    out = jax.vmap(
+        jax.vmap(qmatmul, in_axes=(0, 0, None)), in_axes=(0, None, None)
+    )(xf, w, cfg)
+    return out.reshape(lead + out.shape[1:]) if lead else out[0]
+
+
+def qdot_attn(a: jax.Array, b: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Attention BMM ``a @ b`` over the last/first axes with MX quantization.
+
+    ``a``: (..., M, K); ``b``: (..., K, N) with identical batch dims.  Used
+    for score (q·kᵀ) and output (p·v) GEMMs when ``cfg.attn`` is set; these
+    are "MatMul/BMM layers" in the paper's emulation-library setup.  The
+    backward pass inherits straight-through bf16 gradients (attention grads
+    are quantized at the *projection* GEMMs, the dominant cost).
+    """
+    if not cfg.attn:
+        return _mm(a, b, a.dtype)
+    aq = quantize_mx(a, cfg.a_fwd, axis=-1, block=cfg.block,
+                     scale_mode=cfg.scale_mode)
+    bq = quantize_mx(b, cfg.a_fwd, axis=-2, block=cfg.block,
+                     scale_mode=cfg.scale_mode)
+    return _mm(aq, bq, a.dtype)

@@ -1,0 +1,3 @@
+from .synthetic import lm_batch, lm_input_arrays
+
+__all__ = ["lm_batch", "lm_input_arrays"]

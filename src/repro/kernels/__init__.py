@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the MX quantization hot-spots.
+
+  mx_quant.py  — fused block-scale quantize-dequantize (VPU, VMEM-tiled)
+  mx_matmul.py — MX GEMM with quantize-on-load and fp32 accumulation (MXU)
+  ops.py       — jit'd wrappers (rank/axis handling, interpret fallback)
+  ref.py       — pure-jnp oracles (delegate to the validated numerics core)
+"""
+from .ops import mx_matmul, mx_quantize
+from .ref import mx_matmul_ref, mx_quantize_ref
+
+__all__ = ["mx_matmul", "mx_quantize", "mx_matmul_ref", "mx_quantize_ref"]

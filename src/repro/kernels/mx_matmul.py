@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: MX-quantized GEMM with quantize-on-load.
+
+The TPU-native realization of MX GEMM: rather than materializing quantized
+copies of A and B in HBM (two extra round trips), each (TM,TK)/(TK,TN) tile
+is quantized *after* the HBM→VMEM copy and immediately fed to the MXU in
+bf16-dequantized form with fp32 accumulation.  MX blocks (32 lanes) run
+along the contraction axis for both operands, so block boundaries align
+with K-tiles whenever 32 | TK and the shared scales factor out of every
+partial dot product — the fused result is bit-identical to quantizing the
+whole operands up front (ref.py oracle).
+
+Tiles default to MXU-aligned (multiples of 128); the fp32 accumulator lives
+in a VMEM scratch buffer across the K grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import ElementFormat
+from repro.core.mx import MX_BLOCK
+from .mx_quant import _quantize_block_tile
+
+__all__ = ["mx_matmul_pallas"]
+
+
+def _mx_mm_kernel(a_ref, b_ref, o_ref, acc_ref, *,
+                  fmt_a: Optional[ElementFormat],
+                  fmt_b: Optional[ElementFormat], block: int, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    if fmt_a is not None:
+        a = _quantize_block_tile(a, fmt_a, block)          # blocks along K
+    if fmt_b is not None:
+        bt = _quantize_block_tile(b.T, fmt_b, block)       # blocks along K
+        b = bt.T
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "fmt_a", "fmt_b", "block", "tile_m", "tile_n", "tile_k", "interpret"))
+def mx_matmul_pallas(a: jax.Array, b: jax.Array,
+                     fmt_a: Optional[ElementFormat],
+                     fmt_b: Optional[ElementFormat],
+                     block: int = MX_BLOCK, tile_m: int = 128,
+                     tile_n: int = 128, tile_k: int = 256,
+                     interpret: bool = False) -> jax.Array:
+    """``a (M,K) @ b (K,N)`` with MX quantization of both operands.
+
+    K must be a multiple of ``block``; all dims are padded to tile
+    multiples (zero padding adds all-zero MX blocks, which quantize to zero
+    and contribute nothing to the accumulation).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    if k % block:
+        raise ValueError(f"K={k} not a multiple of block={block}")
+    tile_m, tile_n = min(tile_m, m), min(tile_n, n)
+    tile_k = min(tile_k, k)
+    if tile_k % block:
+        raise ValueError(f"tile_k={tile_k} not a multiple of block={block}")
+    pm, pn, pk = (-m) % tile_m, (-n) % tile_n, (-k) % tile_k
+    ap = jnp.pad(a, ((0, pm), (0, pk))) if (pm or pk) else a
+    bp = jnp.pad(b, ((0, pk), (0, pn))) if (pk or pn) else b
+    gm, gn, gk = (m + pm) // tile_m, (n + pn) // tile_n, (k + pk) // tile_k
+    out = pl.pallas_call(
+        functools.partial(_mx_mm_kernel, fmt_a=fmt_a, fmt_b=fmt_b,
+                          block=block, k_steps=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_k, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), a.dtype),
+        scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.float32)],
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]

@@ -1,0 +1,58 @@
+"""Jit'd dispatch wrappers for the Pallas MX kernels.
+
+Handle arbitrary rank/axis by folding to 2D, pick interpret mode
+automatically off-TPU (this container is CPU-only; TPU is the target), and
+fall back to the pure-jnp reference for shapes the kernels don't cover
+(K not a block multiple).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import ElementFormat
+from repro.core.mx import MX_BLOCK
+from . import ref
+from .mx_matmul import mx_matmul_pallas
+from .mx_quant import mx_quantize_pallas
+
+__all__ = ["mx_quantize", "mx_matmul"]
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "axis", "block"))
+def mx_quantize(x: jax.Array, fmt: Optional[ElementFormat], axis: int = -1,
+                block: int = MX_BLOCK) -> jax.Array:
+    """Kernel-backed quantize-dequantize along ``axis`` for any rank."""
+    if fmt is None:
+        return x
+    ax = axis % x.ndim
+    if x.shape[ax] % block:
+        return ref.mx_quantize_ref(x, fmt, axis=ax, block=block)
+    xm = jnp.moveaxis(x, ax, -1)
+    lead = xm.shape[:-1]
+    x2 = xm.reshape(-1, xm.shape[-1])
+    y2 = mx_quantize_pallas(x2, fmt, block=block,
+                            interpret=_use_interpret())
+    return jnp.moveaxis(y2.reshape(lead + (xm.shape[-1],)), -1, ax)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_a", "fmt_b", "block"))
+def mx_matmul(a: jax.Array, b: jax.Array,
+              fmt_a: Optional[ElementFormat],
+              fmt_b: Optional[ElementFormat],
+              block: int = MX_BLOCK) -> jax.Array:
+    """Kernel-backed ``a (..., K) @ b (K, N)`` with MX-quantized operands."""
+    if a.shape[-1] % block:
+        return ref.mx_matmul_ref(a, b, fmt_a, fmt_b, block=block)
+    lead = a.shape[:-1]
+    a2 = a.reshape(-1, a.shape[-1])
+    y2 = mx_matmul_pallas(a2, b, fmt_a, fmt_b, block=block,
+                          interpret=_use_interpret())
+    return y2.reshape(lead + (b.shape[-1],))

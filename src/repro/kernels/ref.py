@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These delegate to the numerics core (`repro.core.mx`), which is itself
+validated against the exact E4M3/E5M2/FP6/FP4 code tables in
+tests/test_mx_formats.py — so kernel == ref == code-table, transitively.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import ElementFormat
+from repro.core.mx import MX_BLOCK, quantize_mx
+
+__all__ = ["mx_quantize_ref", "mx_matmul_ref"]
+
+
+def mx_quantize_ref(x: jax.Array, fmt: ElementFormat, axis: int = -1,
+                    block: int = MX_BLOCK,
+                    scale_mode: str = "floor") -> jax.Array:
+    """Block-scaled quantize-dequantize along ``axis`` (Algorithm 1)."""
+    return quantize_mx(x, fmt, axis=axis, block=block, scale_mode=scale_mode)
+
+
+def mx_matmul_ref(a: jax.Array, b: jax.Array,
+                  fmt_a: Optional[ElementFormat],
+                  fmt_b: Optional[ElementFormat],
+                  block: int = MX_BLOCK) -> jax.Array:
+    """MX GEMM oracle: quantize both operands along the contraction axis
+    (a: last axis; b: first axis), multiply with fp32 accumulation."""
+    aq = quantize_mx(a, fmt_a, axis=-1, block=block)
+    bq = quantize_mx(b, fmt_b, axis=0, block=block)
+    return jnp.matmul(aq, bq, preferred_element_type=jnp.float32
+                      ).astype(a.dtype)

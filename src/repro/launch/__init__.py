@@ -1,0 +1,10 @@
+"""Launchers: production mesh, multi-pod dry-run, training driver.
+
+NOTE: do not import .dryrun from library code — it pins
+XLA_FLAGS=--xla_force_host_platform_device_count=512 at import time.
+"""
+from .mesh import make_local_mesh, make_production_mesh
+from .steps import make_prefill_step, make_serve_step, make_train_step
+
+__all__ = ["make_local_mesh", "make_production_mesh", "make_prefill_step",
+           "make_serve_step", "make_train_step"]

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (v5e-256).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the "pod" axis is pure
+data parallelism across the slow inter-pod links (gradient all-reduce only,
+optionally MX-compressed — see parallel/compression.py).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (the dry-run pins the device count before any
+mesh is built).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU runs)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,78 @@
+"""Training driver (CLI).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --variant smoke \
+      --precision mxfp8_e4m3 --steps 200 --batch 8 --seq 128 \
+      --ckpt-dir /tmp/run1 [--resume] [--auto-intervention bf16_activations]
+
+Runs the fault-tolerant Trainer (spike watchdog → rollback → precision
+intervention) on the selected architecture with the deterministic
+synthetic LM stream.  On this CPU container use smoke variants / small
+dims; on real hardware the same driver shards through pjit (mesh flags).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import preset
+from repro.data.synthetic import lm_input_arrays
+from repro.models import lm_init, lm_loss
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-paper")
+    ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--precision", default="bf16")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--peak-lr", type=float, default=2e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--auto-intervention", default="bf16_activations")
+    ap.add_argument("--log-jsonl", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, args.variant)
+    qcfg = preset(args.precision)
+    params = lm_init(jax.random.PRNGKey(args.seed), cfg)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train] {cfg.name}: {n/1e6:.2f}M params, precision "
+          f"{qcfg.describe()}")
+
+    tcfg = TrainerConfig(total_steps=args.steps, peak_lr=args.peak_lr,
+                         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                         auto_intervention=args.auto_intervention)
+    trainer = Trainer(
+        loss_fn=lambda p, b, q: lm_loss(p, b, cfg, q),
+        params=params, qcfg=qcfg,
+        batch_fn=lambda step: lm_input_arrays(step, cfg, args.batch,
+                                              args.seq, args.seed),
+        opt_cfg=AdamWConfig(), tcfg=tcfg)
+    if args.resume and trainer.restore():
+        print(f"[train] resumed at step {trainer.step}")
+
+    hist = trainer.run(args.steps - trainer.step)
+    for rec in hist[:: max(len(hist) // 20, 1)]:
+        print(f"  step {rec['step']:>6} loss {rec['loss']:.4f} "
+              f"gnorm {rec['grad_norm']:.3f} {rec['time_s']*1e3:.0f}ms")
+    if trainer.events:
+        print("[train] events:", json.dumps(trainer.events, indent=1))
+    if args.log_jsonl:
+        with open(args.log_jsonl, "w") as f:
+            for rec in hist:
+                f.write(json.dumps(rec) + "\n")
+    print(f"[train] final loss {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

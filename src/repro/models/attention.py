@@ -1,0 +1,237 @@
+"""Attention: GQA/MQA/MHA with QK-norm and RoPE, chunked online-softmax.
+
+The score/value BMMs are MX-quantized when ``qcfg.attn`` is set (the MX
+emulation library quantizes MatMul/BMM inputs); softmax runs in fp32.
+
+`flash_attention` is the TPU-idiomatic exact attention: lax.scan over query
+chunks with an inner scan over KV chunks carrying online-softmax state
+(m, l, acc), bounding live memory to one (Cq, Ck) tile per (batch, head) —
+required for the 32k prefill cells to fit 16 GB/chip without a fused kernel.
+Grouped-query structure (B, Hkv, G, ...) is kept inside the einsums so KV
+heads are never materialized G times.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig, quantize_mx
+from .layers import dense_init, norm_init, apply_norm, qdense, rope
+
+__all__ = ["attn_init", "attention", "attention_decode", "flash_attention",
+           "local_attention"]
+
+NEG_INF = -1e30
+
+
+def _maybe_quant(x, qcfg: QuantConfig, axis: int):
+    if not qcfg.attn or qcfg.a_fwd is None:
+        return x
+    return quantize_mx(x, qcfg.a_fwd, axis=axis, block=qcfg.block,
+                       scale_mode=qcfg.scale_mode)
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, d_head: int,
+              qk_norm: bool = False, qkv_bias: bool = False, n_layers: int = 1):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * d_head, bias=qkv_bias),
+        "wk": dense_init(ks[1], d_model, n_kv * d_head, bias=qkv_bias),
+        "wv": dense_init(ks[2], d_model, n_kv * d_head, bias=qkv_bias),
+        "wo": dense_init(ks[3], n_heads * d_head, d_model,
+                         std=1.0 / math.sqrt(n_heads * d_head * 2 * n_layers)),
+    }
+    if qk_norm:
+        p["q_norm"] = norm_init(d_head)
+        p["k_norm"] = norm_init(d_head)
+    return p
+
+
+def _project_qkv(p, x, xkv, qcfg, n_heads, n_kv, d_head, positions,
+                 kv_positions=None, rope_theta=1e4, use_rope=True):
+    B, T = x.shape[:2]
+    Tk = xkv.shape[1]
+    G = n_heads // n_kv
+    q = qdense(p["wq"], x, qcfg).reshape(B, T, n_kv, G, d_head)
+    k = qdense(p["wk"], xkv, qcfg).reshape(B, Tk, n_kv, 1, d_head)
+    v = qdense(p["wv"], xkv, qcfg).reshape(B, Tk, n_kv, 1, d_head)
+    if "q_norm" in p:
+        q = apply_norm(p["q_norm"], q, qcfg.without_ln_quant())
+        k = apply_norm(p["k_norm"], k, qcfg.without_ln_quant())
+    if use_rope:
+        kv_positions = positions if kv_positions is None else kv_positions
+        q = rope(q, positions, rope_theta)
+        k = rope(k, kv_positions, rope_theta)
+    return q, k[:, :, :, 0], v[:, :, :, 0]
+
+
+def flash_attention(q, k, v, qcfg: QuantConfig, causal: bool = True,
+                    q_chunk: int = 512, kv_chunk: int = 1024,
+                    q_offset: int = 0) -> jax.Array:
+    """Exact chunked attention with online softmax.
+
+    q: (B, Tq, Hkv, G, d); k: (B, Tk, Hkv, d); v: (B, Tk, Hkv, dv).
+    Returns (B, Tq, Hkv, G, dv).  ``q_offset`` shifts query positions for
+    causal masking (decode/prefill continuation).  Baseline computes every
+    (q,kv) tile and masks — the causal upper triangle is wasted compute
+    flagged in the roofline (hillclimb target).
+    """
+    B, Tq, Hkv, G, d = q.shape
+    Tk = k.shape[1]
+    dv = v.shape[-1]
+    q_chunk = min(q_chunk, Tq)
+    kv_chunk = min(kv_chunk, Tk)
+    assert Tq % q_chunk == 0 and Tk % kv_chunk == 0, (Tq, q_chunk, Tk, kv_chunk)
+    nq, nk = Tq // q_chunk, Tk // kv_chunk
+    scale = 1.0 / math.sqrt(d)
+
+    qc = q.reshape(B, nq, q_chunk, Hkv, G, d).transpose(1, 0, 3, 4, 2, 5)
+    kc = k.reshape(B, nk, kv_chunk, Hkv, d).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nk, kv_chunk, Hkv, dv).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_qt):
+        qi, qt = qi_qt                       # qt: (B, Hkv, G, Cq, d)
+        qt = _maybe_quant(qt, qcfg, axis=-1)
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, dv), jnp.float32)
+
+        def kv_step(carry, ki_kt_vt):
+            m, l, acc = carry
+            ki, kt, vt = ki_kt_vt            # kt/vt: (B, Hkv, Ck, d)
+            ktq = _maybe_quant(kt, qcfg, axis=-1)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qt.astype(jnp.float32),
+                           ktq.astype(jnp.float32)) * scale
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk) + q_offset
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+                s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            pq = _maybe_quant(p, qcfg, axis=-1)
+            vtq = _maybe_quant(vt, qcfg, axis=-2)
+            pv = jnp.einsum("bhgqk,bhkd->bhgqd", pq, vtq.astype(jnp.float32))
+            return (m_new, l * corr + jnp.sum(p, -1),
+                    acc * corr[..., None] + pv), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, out = jax.lax.scan(q_step, None, (jnp.arange(nq), qc))
+    # out: (nq, B, Hkv, G, Cq, dv) -> (B, Tq, Hkv, G, dv)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Tq, Hkv, G, dv)
+    return out
+
+
+def local_attention(q, k, v, qcfg: QuantConfig, window: int) -> jax.Array:
+    """Causal sliding-window attention (RecurrentGemma's 1:2 local layers).
+
+    Chunked so that query chunk i attends only kv chunks {i-1, i}: exact
+    for window ≤ chunk, O(T·W) compute/memory instead of O(T²).
+    """
+    B, Tq, Hkv, G, d = q.shape
+    W = min(window, Tq)
+    if Tq % W:  # pad sequence to a window multiple
+        pad = (-Tq) % W
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    T = q.shape[1]
+    n = T // W
+    scale = 1.0 / math.sqrt(d)
+    qc = q.reshape(B, n, W, Hkv, G, d)
+    kc = k.reshape(B, n, W, Hkv, d)
+    vc = v.reshape(B, n, W, Hkv, d)
+    # previous chunk (zero for the first -> masked out by position check)
+    k_prev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], 1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], 1)
+    k2 = jnp.concatenate([k_prev, kc], 2)     # (B, n, 2W, Hkv, d)
+    v2 = jnp.concatenate([v_prev, vc], 2)
+    qq = _maybe_quant(qc, qcfg, axis=-1)
+    kk = _maybe_quant(k2, qcfg, axis=-1)
+    s = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qq.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    qpos = jnp.arange(W)[:, None] + W                    # within [W, 2W)
+    kpos = jnp.arange(2 * W)[None, :]
+    ok = (qpos >= kpos) & (qpos - kpos < window)
+    chunk0 = jnp.arange(n) == 0                          # first chunk: no prev
+    ok0 = ok & (kpos >= W)
+    mask = jnp.where(chunk0[:, None, None], ok0[None], ok[None])  # (n, W, 2W)
+    s = jnp.where(mask[None, :, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    pq = _maybe_quant(p, qcfg, axis=-1)
+    vv = _maybe_quant(v2, qcfg, axis=-3)
+    o = jnp.einsum("bnhgqk,bnkhd->bnqhgd", pq, vv.astype(jnp.float32))
+    o = o.reshape(B, T, Hkv, G, d)[:, :Tq].astype(q.dtype)
+    return o
+
+
+def attention(p, x, *, qcfg: QuantConfig, n_heads: int, n_kv: int,
+              d_head: int, positions, causal: bool = True, window: int = 0,
+              xkv: Optional[jax.Array] = None, kv_positions=None,
+              rope_theta: float = 1e4, use_rope: bool = True,
+              q_chunk: int = 512, kv_chunk: int = 1024) -> jax.Array:
+    """Full attention layer (projections + mixing + output projection)."""
+    cross = xkv is not None
+    q, k, v = _project_qkv(p, x, xkv if cross else x, qcfg, n_heads, n_kv,
+                           d_head, positions, kv_positions, rope_theta,
+                           use_rope=use_rope and not cross)
+    if window > 0 and not cross:
+        o = local_attention(q, k, v, qcfg, window)
+    else:
+        o = flash_attention(q, k, v, qcfg, causal=causal and not cross,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    B, T = x.shape[:2]
+    o = o.reshape(B, T, n_heads * d_head)
+    return qdense(p["wo"], o, qcfg)
+
+
+def attention_decode(p, x, cache, *, qcfg: QuantConfig, n_heads: int,
+                     n_kv: int, d_head: int, pos: jax.Array,
+                     window: int = 0, rope_theta: float = 1e4,
+                     use_rope: bool = True):
+    """One-token decode with a (k, v) ring/full cache.
+
+    x: (B, 1, D); cache: {"k": (B, S, Hkv, d), "v": ..., } ;
+    pos: scalar int32 — current position (same for the whole batch).
+    For windowed layers the cache is a ring buffer of size ``window``.
+    """
+    B = x.shape[0]
+    S = cache["k"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, x, qcfg, n_heads, n_kv, d_head,
+                                   positions, None, rope_theta,
+                                   use_rope=use_rope)
+    slot = pos % S if window > 0 else pos
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    G = n_heads // n_kv
+    qq = _maybe_quant(q[:, 0], qcfg, axis=-1)          # (B, Hkv, G, d)
+    kk = _maybe_quant(k, qcfg, axis=-1)
+    s = jnp.einsum("bhgd,bshd->bhgs", qq.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / math.sqrt(d_head)
+    kv_pos = jnp.arange(S)
+    if window > 0:
+        # Ring buffer: a slot is valid if it was written within the last
+        # min(pos+1, window) steps.
+        age = (slot - kv_pos) % S
+        valid = age <= jnp.minimum(pos, window - 1)
+    else:
+        valid = kv_pos <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    prq = _maybe_quant(pr, qcfg, axis=-1)
+    vv = _maybe_quant(v, qcfg, axis=-3)
+    o = jnp.einsum("bhgs,bshd->bhgd", prq, vv.astype(jnp.float32))
+    o = o.reshape(B, 1, n_heads * d_head).astype(x.dtype)
+    out = qdense(p["wo"], o, qcfg)
+    return out, {"k": k, "v": v}

@@ -1,0 +1,111 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with MX-quantized projections.
+
+Training uses the expanded form (per-head K/V decompressed, chunked flash
+attention); decoding uses the absorbed form operating directly on the
+compressed latent cache (kv_lora + rope dims per position) — the whole
+point of MLA.  All up/down projections are MX GEMMs; the latent cache is
+stored bf16 (the paper quantizes GEMM operands, not state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig, quantize_mx
+from .layers import dense_init, norm_init, apply_norm, qdense, rope
+from .attention import flash_attention, _maybe_quant, NEG_INF
+
+__all__ = ["mla_init", "mla_apply", "mla_decode"]
+
+
+def mla_init(key, d_model: int, n_heads: int, q_lora: int, kv_lora: int,
+             nope: int, rope_dim: int, v_head: int, n_layers: int = 1):
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], d_model, q_lora),
+        "q_ln": norm_init(q_lora),
+        "w_uq": dense_init(ks[1], q_lora, n_heads * (nope + rope_dim)),
+        "w_dkv": dense_init(ks[2], d_model, kv_lora),
+        "kv_ln": norm_init(kv_lora),
+        "w_uk": dense_init(ks[3], kv_lora, n_heads * nope),
+        "w_uv": dense_init(ks[4], kv_lora, n_heads * v_head),
+        "w_kr": dense_init(ks[5], d_model, rope_dim),
+        "wo": dense_init(ks[6], n_heads * v_head, d_model,
+                         std=1.0 / math.sqrt(n_heads * v_head * 2 * n_layers)),
+    }
+
+
+def _latents(p, x, qcfg, positions, rope_theta):
+    """Compressed queries and the (ckv, k_rope) latent pair."""
+    B, T, _ = x.shape
+    cq = apply_norm(p["q_ln"], qdense(p["w_dq"], x, qcfg), qcfg)
+    ckv = apply_norm(p["kv_ln"], qdense(p["w_dkv"], x, qcfg), qcfg)
+    kr = qdense(p["w_kr"], x, qcfg).reshape(B, T, 1, -1)
+    kr = rope(kr, positions, rope_theta).reshape(B, T, -1)
+    return cq, ckv, kr
+
+
+def mla_apply(p, x, *, qcfg: QuantConfig, n_heads: int, nope: int,
+              rope_dim: int, v_head: int, positions,
+              rope_theta: float = 1e4, q_chunk: int = 512,
+              kv_chunk: int = 1024) -> jax.Array:
+    B, T, _ = x.shape
+    cq, ckv, kr = _latents(p, x, qcfg, positions, rope_theta)
+    q = qdense(p["w_uq"], cq, qcfg).reshape(B, T, n_heads, nope + rope_dim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, rope_theta)
+    k_nope = qdense(p["w_uk"], ckv, qcfg).reshape(B, T, n_heads, nope)
+    v = qdense(p["w_uv"], ckv, qcfg).reshape(B, T, n_heads, v_head)
+    k_rope = jnp.broadcast_to(kr[:, :, None, :], (B, T, n_heads, rope_dim))
+    # Layout for flash: every head is its own "kv head" (group G=1).
+    qf = jnp.concatenate([q_nope, q_rope], -1)[:, :, :, None, :]  # (B,T,H,1,dqk)
+    kf = jnp.concatenate([k_nope, k_rope], -1)      # (B, T, H, dqk)
+    o = flash_attention(qf, kf, v, qcfg, causal=True,
+                        q_chunk=q_chunk, kv_chunk=kv_chunk)
+    o = o.reshape(B, T, n_heads * v_head)
+    return qdense(p["wo"], o, qcfg)
+
+
+def mla_decode(p, x, cache, *, qcfg: QuantConfig, n_heads: int, nope: int,
+               rope_dim: int, v_head: int, pos, rope_theta: float = 1e4
+               ) -> Tuple[jax.Array, dict]:
+    """Absorbed-form decode on the compressed cache.
+
+    cache: {"ckv": (B, S, kv_lora), "kr": (B, S, rope_dim)}; x: (B, 1, D).
+    Scores: q_nopeᵀ·W_uk·ckv + q_ropeᵀ·k_rope; context is accumulated in
+    latent space then decompressed through W_uv once per step.
+    """
+    B = x.shape[0]
+    S = cache["ckv"].shape[1]
+    kv_lora = cache["ckv"].shape[-1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    cq, ckv_new, kr_new = _latents(p, x, qcfg, positions, rope_theta)
+    ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, pos, 0))
+    kr = jax.lax.dynamic_update_slice(
+        cache["kr"], kr_new.astype(cache["kr"].dtype), (0, pos, 0))
+
+    q = qdense(p["w_uq"], cq, qcfg).reshape(B, n_heads, nope + rope_dim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope[:, None], positions, rope_theta)[:, 0]
+    w_uk = p["w_uk"]["w"].astype(x.dtype).reshape(kv_lora, n_heads, nope)
+    # Absorb W_uk into the query: q_eff (B, H, kv_lora).
+    q_eff = jnp.einsum("bhd,chd->bhc", _maybe_quant(q_nope, qcfg, -1),
+                       w_uk)
+    scale = 1.0 / math.sqrt(nope + rope_dim)
+    s = (jnp.einsum("bhc,bsc->bhs", q_eff.astype(jnp.float32),
+                    ckv.astype(jnp.float32))
+         + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                      kr.astype(jnp.float32))) * scale
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsc->bhc", _maybe_quant(pr, qcfg, -1),
+                     _maybe_quant(ckv, qcfg, -2).astype(jnp.float32))
+    w_uv = p["w_uv"]["w"].astype(x.dtype).reshape(kv_lora, n_heads, v_head)
+    o = jnp.einsum("bhc,chv->bhv", ctx.astype(x.dtype), w_uv)
+    o = o.reshape(B, 1, n_heads * v_head)
+    return qdense(p["wo"], o, qcfg), {"ckv": ckv, "kr": kr}

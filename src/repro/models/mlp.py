@@ -1,0 +1,49 @@
+"""Feed-forward blocks: GeLU/ReLU MLP and SwiGLU/GeGLU gated variants.
+
+Activation functions run in bf16 (vector ops); all projections are
+MX-quantized GEMMs.  The SwiGLU hidden dim convention follows the paper
+(§4.1 fn. 4): gated variants use 2/3 of the dense hidden width when parity
+is requested by the caller (configs pass explicit d_ff, so no silent
+resizing happens here).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig
+from .layers import dense_init, qdense
+
+__all__ = ["mlp_init", "mlp_apply", "ACTIVATIONS"]
+
+ACTIVATIONS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str = "gelu",
+             n_layers: int = 1, init: str = "trunc_normal"):
+    gated = act in ("swiglu", "geglu")
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d_model, d_ff, init=init),
+         "w_down": dense_init(ks[1], d_ff, d_model, init=init,
+                              std=1.0 / math.sqrt(d_ff * 2 * n_layers))}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, init=init)
+    return p
+
+
+def mlp_apply(p, x: jax.Array, qcfg: QuantConfig, act: str = "gelu"
+              ) -> jax.Array:
+    up = qdense(p["w_up"], x, qcfg)
+    if act == "swiglu":
+        h = jax.nn.silu(qdense(p["w_gate"], x, qcfg)) * up
+    elif act == "geglu":
+        h = jax.nn.gelu(qdense(p["w_gate"], x, qcfg)) * up
+    else:
+        h = ACTIVATIONS[act](up)
+    return qdense(p["w_down"], h, qcfg)

@@ -1,0 +1,99 @@
+"""Student-teacher residual MLP proxy (paper §4, Eq. 1).
+
+  A_0 = x;  h_k = W⁽¹⁾_k LN(A_{k−1});  A_k = A_{k−1} + W⁽²⁾_k φ(h_k)
+
+The teacher shares the architecture minus the layernorms; targets get
+N(0, σ=1e-3) label noise; inputs are i.i.d. standard Gaussians drawn by a
+step-indexed deterministic stream (identical batch order across precision
+re-runs, the paper's controlled-comparison protocol §4.1).
+
+Default init is PyTorch-style Kaiming-uniform; "xavier_lowgain" reproduces
+the App. B ablation.  SwiGLU uses hidden = 8/3·d (§4.1 fn. 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig
+from .layers import apply_norm, dense_init, norm_init, qdense
+
+__all__ = ["ProxyConfig", "proxy_init", "teacher_init", "proxy_apply",
+           "proxy_batch", "proxy_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProxyConfig:
+    d_model: int = 512
+    n_layers: int = 4
+    act: str = "gelu"                # "relu" | "gelu" | "swiglu"
+    use_ln: bool = True
+    init: str = "kaiming_uniform"    # | "xavier_lowgain" | "trunc_normal"
+    label_noise: float = 1e-3
+    batch_size: int = 2048
+
+    @property
+    def d_hidden(self) -> int:
+        if self.act == "swiglu":
+            return int(8 * self.d_model / 3 / 32) * 32
+        return 4 * self.d_model
+
+
+def _layer_init(key, cfg: ProxyConfig, with_ln: bool):
+    ks = jax.random.split(key, 4)
+    p = {"w1": dense_init(ks[0], cfg.d_model, cfg.d_hidden, init=cfg.init),
+         "w2": dense_init(ks[1], cfg.d_hidden, cfg.d_model, init=cfg.init)}
+    if cfg.act == "swiglu":
+        p["w1g"] = dense_init(ks[2], cfg.d_model, cfg.d_hidden, init=cfg.init)
+    if with_ln:
+        p["ln"] = norm_init(cfg.d_model, "layernorm")
+    return p
+
+
+def proxy_init(key, cfg: ProxyConfig, with_ln: Optional[bool] = None):
+    with_ln = cfg.use_ln if with_ln is None else with_ln
+    keys = jax.random.split(key, cfg.n_layers)
+    return {"layers": [
+        _layer_init(k, cfg, with_ln) for k in keys]}
+
+
+def teacher_init(key, cfg: ProxyConfig):
+    """Teacher = same architecture without layernorm (paper §4.1)."""
+    return proxy_init(key, cfg, with_ln=False)
+
+
+def proxy_apply(params, x: jax.Array, cfg: ProxyConfig,
+                qcfg: QuantConfig) -> jax.Array:
+    a = x
+    for p in params["layers"]:
+        h_in = apply_norm(p["ln"], a, qcfg, "layernorm") if "ln" in p else a
+        h = qdense(p["w1"], h_in, qcfg)
+        if cfg.act == "swiglu":
+            phi = jax.nn.silu(qdense(p["w1g"], h_in, qcfg)) * h
+        elif cfg.act == "relu":
+            phi = jax.nn.relu(h)
+        else:
+            phi = jax.nn.gelu(h)
+        a = a + qdense(p["w2"], phi, qcfg)
+    return a
+
+
+def proxy_batch(step: int, teacher_params, cfg: ProxyConfig, seed: int = 0
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Deterministic step-indexed batch: same data order for every rerun."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    kx, kn = jax.random.split(key)
+    x = jax.random.normal(kx, (cfg.batch_size, cfg.d_model), jnp.float32)
+    y = proxy_apply(teacher_params, x, cfg, QuantConfig.bf16().to_fp32())
+    y = y + cfg.label_noise * jax.random.normal(kn, y.shape, jnp.float32)
+    return x, y
+
+
+def proxy_loss(params, batch, cfg: ProxyConfig, qcfg: QuantConfig):
+    x, y = batch
+    pred = proxy_apply(params, x, cfg, qcfg)
+    loss = jnp.mean(jnp.square(pred - y))
+    return loss, {"loss": loss}

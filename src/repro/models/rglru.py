@@ -1,0 +1,112 @@
+"""Griffin / RecurrentGemma recurrent block: conv1d + RG-LRU.
+
+The RG-LRU recurrence  h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t),
+a_t = exp(−c·softplus(Λ)·σ(r_t)),  is a *vector* op chain — per the paper's
+App. A convention these run in bf16/fp32 and are NOT MX-quantized; every
+projection around them (gates, branches, conv, output) is an MX GEMM.
+
+Training/prefill uses jax.lax.associative_scan (log-depth on TPU);
+decoding is the O(1) single-step recurrence carrying (conv_state, h).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig
+from .layers import dense_init, qdense, trunc_normal
+
+__all__ = ["rec_block_init", "rec_block_apply", "rec_block_decode",
+           "rglru_scan"]
+
+_C = 8.0           # Griffin's fixed gate sharpness
+_CONV_W = 4        # temporal conv width
+
+
+def rec_block_init(key, d_model: int, d_rnn: int, n_layers: int = 1):
+    ks = jax.random.split(key, 7)
+    # Λ init so that a ∈ (0.9, 0.999) at σ(r)=0.5 (Griffin appendix).
+    u = jax.random.uniform(ks[0], (d_rnn,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) * 2.0 / _C))  # softplus^{-1}
+    return {
+        "w_main": dense_init(ks[1], d_model, d_rnn),
+        "w_gate": dense_init(ks[2], d_model, d_rnn),
+        "conv_w": trunc_normal(ks[3], (_CONV_W, d_rnn), 1.0 / math.sqrt(_CONV_W)),
+        "conv_b": jnp.zeros((d_rnn,), jnp.float32),
+        "lam": lam,
+        "w_i": dense_init(ks[4], d_rnn, d_rnn),
+        "w_r": dense_init(ks[5], d_rnn, d_rnn),
+        "w_out": dense_init(ks[6], d_rnn, d_model,
+                            std=1.0 / math.sqrt(d_rnn * 2 * n_layers)),
+    }
+
+
+def _conv1d(p, x: jax.Array, state: Optional[jax.Array] = None):
+    """Causal depthwise conv, width 4. x: (B, T, d). state: (B, 3, d)."""
+    w = p["conv_w"].astype(x.dtype)
+    if state is None:
+        pads = jnp.zeros_like(x[:, :1])
+        y = w[-1] * x
+        shifted = x
+        for j in range(1, _CONV_W):
+            shifted = jnp.concatenate([pads, shifted[:, :-1]], 1)
+            y = y + w[_CONV_W - 1 - j] * shifted
+        new_state = None
+    else:
+        full = jnp.concatenate([state, x], 1)          # (B, 3+T, d)
+        y = sum(w[j] * full[:, j:j + x.shape[1]] for j in range(_CONV_W))
+        new_state = full[:, -( _CONV_W - 1):]
+    return y + p["conv_b"].astype(x.dtype), new_state
+
+
+def rglru_scan(p, x: jax.Array, qcfg: QuantConfig,
+               h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """RG-LRU over (B, T, d). Returns (h_seq, h_last)."""
+    i = jax.nn.sigmoid(qdense(p["w_i"], x, qcfg).astype(jnp.float32))
+    r = jax.nn.sigmoid(qdense(p["w_r"], x, qcfg).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * x.astype(jnp.float32))
+
+    def combine(u, v):
+        (a1, b1), (a2, b2) = u, v
+        return a2 * a1, a2 * b1 + b2
+
+    A, Bc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = Bc if h0 is None else Bc + A * h0[:, None]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p, x_t: jax.Array, h: jax.Array, qcfg: QuantConfig):
+    """Single-step recurrence. x_t: (B, d); h: (B, d) fp32."""
+    i = jax.nn.sigmoid(qdense(p["w_i"], x_t, qcfg).astype(jnp.float32))
+    r = jax.nn.sigmoid(qdense(p["w_r"], x_t, qcfg).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * x_t.astype(jnp.float32))
+    h_new = a * h + b
+    return h_new.astype(x_t.dtype), h_new
+
+
+def rec_block_apply(p, x: jax.Array, qcfg: QuantConfig) -> jax.Array:
+    """Temporal-mixing block (train/prefill). x: (B, T, D)."""
+    gate = jax.nn.gelu(qdense(p["w_gate"], x, qcfg))
+    main = qdense(p["w_main"], x, qcfg)
+    c, _ = _conv1d(p, main)
+    h, _ = rglru_scan(p, c, qcfg)
+    return qdense(p["w_out"], h * gate, qcfg)
+
+
+def rec_block_decode(p, x: jax.Array, cache: dict, qcfg: QuantConfig):
+    """One-token step. x: (B, 1, D); cache: {"conv": (B,3,d), "h": (B,d)}."""
+    gate = jax.nn.gelu(qdense(p["w_gate"], x, qcfg))
+    main = qdense(p["w_main"], x, qcfg)
+    c, conv_state = _conv1d(p, main, cache["conv"])
+    y_t, h_new = rglru_step(p, c[:, 0], cache["h"], qcfg)
+    out = qdense(p["w_out"], y_t[:, None] * gate, qcfg)
+    return out, {"conv": conv_state, "h": h_new}

@@ -1,0 +1,554 @@
+"""Model assembly: decoder LMs, hybrid/SSM stacks, and encoder-decoders.
+
+One `LMConfig` covers all 10 assigned architectures via a cyclic
+``block_pattern`` (("attn",) for dense; ("rec","rec","attn") for
+RecurrentGemma; 7×("mlstm",)+("slstm",) for xLSTM; MoE/MLA switches for the
+DeepSeek family) plus an optional encoder stack for seamless-m4t.
+
+Layers are stacked and iterated with jax.lax.scan (homogeneous "super
+blocks" = one full pattern repetition), with per-superblock activation
+rematerialization — this keeps HLO size and compile time independent of
+depth and bounds activation memory for the 16 GB/chip budget.  Cross-
+entropy streams over token chunks with the LM-head GEMM *inside* the chunk
+loop so full fp32 logits (up to vocab 256k) are never materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig, qmatmul
+from repro.parallel.sharding import shard_act
+from .layers import (COMPUTE_DTYPE, apply_norm, dense_init, embed_init,
+                     embed_lookup, norm_init, qdense)
+from .attention import attention, attention_decode, attn_init
+from .mla import mla_apply, mla_decode, mla_init
+from .mlp import mlp_apply, mlp_init
+from .moe import moe_apply, moe_init
+from .rglru import rec_block_apply, rec_block_decode, rec_block_init
+from .xlstm import (mlstm_apply, mlstm_decode, mlstm_init, slstm_apply,
+                    slstm_decode, slstm_init)
+
+__all__ = ["LMConfig", "lm_init", "lm_apply", "lm_loss", "init_cache",
+           "lm_decode_step", "block_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_head: int = 64
+    d_ff: int = 1024
+    vocab: int = 512
+    norm: str = "rmsnorm"            # "rmsnorm" | "layernorm"
+    act: str = "gelu"                # "gelu" | "relu" | "swiglu" | "geglu"
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0                # shared experts (DeepSeek/Moonlight)
+    moe_dff: int = 0                 # per-expert hidden dim
+    capacity_factor: float = 1.25
+    first_dense: int = 0             # leading dense layers before MoE ones
+    # --- MLA (DeepSeek-V2) ---
+    mla: bool = False
+    q_lora: int = 1536
+    kv_lora: int = 512
+    nope_dim: int = 128
+    rope_dim: int = 64
+    v_head: int = 128
+    # --- hybrid / SSM ---
+    block_pattern: Tuple[str, ...] = ("attn",)
+    window: int = 0                  # local-attention window (0 = global)
+    d_rnn: int = 0
+    # --- encoder-decoder (seamless) ---
+    enc_layers: int = 0
+    # --- stub modality frontend: "none" | "patch" | "frames" ---
+    frontend: str = "none"
+    n_frontend_tokens: int = 0
+    # --- execution ---
+    scan_layers: bool = True
+    remat: str = "full"              # "none" | "full" | "dots"
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    loss_chunk: int = 2048
+
+    @property
+    def qk_dim(self) -> int:
+        return (self.nope_dim + self.rope_dim) if self.mla else self.d_head
+
+    def param_count(self, active_only: bool = False) -> int:
+        """Analytic parameter count (total, or active-per-token for MoE)."""
+        D, F = self.d_model, self.d_ff
+        per_layer = {}
+        if self.mla:
+            attn = (D * self.q_lora + self.q_lora * self.n_heads * self.qk_dim
+                    + D * self.kv_lora + self.kv_lora * self.n_heads
+                    * (self.nope_dim + self.v_head) + D * self.rope_dim
+                    + self.n_heads * self.v_head * D)
+        else:
+            attn = D * self.n_heads * self.d_head \
+                + 2 * D * self.n_kv_heads * self.d_head \
+                + self.n_heads * self.d_head * D
+        n_mats = 3 if self.act in ("swiglu", "geglu") else 2
+        mlp = n_mats * D * F
+        if self.n_experts:
+            e = self.top_k if active_only else self.n_experts
+            moe = n_mats * D * self.moe_dff * (e + self.n_shared) \
+                + D * self.n_experts
+        else:
+            moe = mlp
+        per_layer["attn"] = attn + moe
+        per_layer["rec"] = (3 * D * self.d_rnn + 2 * self.d_rnn ** 2
+                            + self.d_rnn * D) + mlp
+        d_in = 2 * D
+        per_layer["mlstm"] = D * 2 * d_in + 3 * d_in * d_in + d_in * D
+        per_layer["slstm"] = 4 * D * D + D * D + 3 * D * int(4 * D / 3)
+        total = 0
+        pat = self.block_pattern
+        for i in range(self.n_layers):
+            kind = pat[i % len(pat)]
+            if self.n_experts and kind == "attn" and i < self.first_dense:
+                total += attn + mlp
+            else:
+                total += per_layer[kind]
+        total += self.enc_layers * (attn + mlp + (attn if False else 0))
+        total += self.vocab * D * (1 if self.tie_embeddings else 2)
+        return total
+
+
+# --------------------------------------------------------------------------
+# block plan: partition layers into scan groups of full pattern repetitions
+# --------------------------------------------------------------------------
+def block_plan(cfg: LMConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    pat = tuple(cfg.block_pattern)
+    m = len(pat)
+    n_layers = cfg.n_layers
+    groups: List[Tuple[Tuple[str, ...], int]] = []
+    # leading dense layers for MoE archs get their own group
+    lead = cfg.first_dense if cfg.n_experts else 0
+    if lead:
+        groups.append((("dense_attn",) * 1, lead))
+        n_layers -= lead
+    n_rep, tail = divmod(n_layers, m)
+    if n_rep:
+        groups.append((pat, n_rep))
+    if tail:
+        groups.append((pat[:tail], 1))
+    return groups
+
+
+# --------------------------------------------------------------------------
+# per-block init / apply / decode
+# --------------------------------------------------------------------------
+def _block_init(key, kind: str, cfg: LMConfig):
+    ks = jax.random.split(key, 4)
+    L = cfg.n_layers
+    if kind in ("attn", "dense_attn", "enc_attn"):
+        p = {"ln1": norm_init(cfg.d_model, cfg.norm),
+             "ln2": norm_init(cfg.d_model, cfg.norm)}
+        if cfg.mla and kind != "enc_attn":
+            p["attn"] = mla_init(ks[0], cfg.d_model, cfg.n_heads, cfg.q_lora,
+                                 cfg.kv_lora, cfg.nope_dim, cfg.rope_dim,
+                                 cfg.v_head, L)
+        else:
+            p["attn"] = attn_init(ks[0], cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.d_head, cfg.qk_norm,
+                                  cfg.qkv_bias, L)
+        if cfg.n_experts and kind == "attn":
+            p["moe"] = moe_init(ks[1], cfg.d_model, cfg.moe_dff,
+                                cfg.n_experts, cfg.act, L)
+            if cfg.n_shared:
+                p["shared"] = mlp_init(ks[2], cfg.d_model,
+                                       cfg.n_shared * cfg.moe_dff, cfg.act, L)
+        else:
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, L)
+        return p
+    if kind == "dec_attn":
+        return {"ln1": norm_init(cfg.d_model, cfg.norm),
+                "attn": attn_init(ks[0], cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.d_head, cfg.qk_norm,
+                                  cfg.qkv_bias, L),
+                "ln_x": norm_init(cfg.d_model, cfg.norm),
+                "xattn": attn_init(ks[1], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.d_head, cfg.qk_norm,
+                                   cfg.qkv_bias, L),
+                "ln2": norm_init(cfg.d_model, cfg.norm),
+                "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.act, L)}
+    if kind == "rec":
+        return {"ln1": norm_init(cfg.d_model, cfg.norm),
+                "rec": rec_block_init(ks[0], cfg.d_model, cfg.d_rnn, L),
+                "ln2": norm_init(cfg.d_model, cfg.norm),
+                "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, L)}
+    if kind == "mlstm":
+        return {"ln": norm_init(cfg.d_model, cfg.norm),
+                "cell": mlstm_init(ks[0], cfg.d_model, cfg.n_heads, L)}
+    if kind == "slstm":
+        return {"ln": norm_init(cfg.d_model, cfg.norm),
+                "cell": slstm_init(ks[0], cfg.d_model, cfg.n_heads, L)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _block_apply(h, p, kind: str, cfg: LMConfig, qcfg: QuantConfig,
+                 positions, enc_out=None):
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "dense_attn", "enc_attn", "dec_attn"):
+        hn = apply_norm(p["ln1"], h, qcfg, cfg.norm)
+        if cfg.mla and kind not in ("enc_attn",):
+            a = mla_apply(p["attn"], hn, qcfg=qcfg, n_heads=cfg.n_heads,
+                          nope=cfg.nope_dim, rope_dim=cfg.rope_dim,
+                          v_head=cfg.v_head, positions=positions,
+                          rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk,
+                          kv_chunk=cfg.kv_chunk)
+        else:
+            a = attention(p["attn"], hn, qcfg=qcfg, n_heads=cfg.n_heads,
+                          n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+                          positions=positions,
+                          causal=(kind != "enc_attn"),
+                          window=cfg.window if kind == "attn" else 0,
+                          rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk,
+                          kv_chunk=cfg.kv_chunk)
+        h = h + a
+        if kind == "dec_attn":
+            hx = apply_norm(p["ln_x"], h, qcfg, cfg.norm)
+            h = h + attention(p["xattn"], hx, qcfg=qcfg, n_heads=cfg.n_heads,
+                              n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+                              positions=positions, xkv=enc_out,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        hn2 = apply_norm(p["ln2"], h, qcfg, cfg.norm)
+        if "moe" in p:
+            B, T, D = hn2.shape
+            y, metrics = moe_apply(p["moe"], hn2.reshape(B * T, D), qcfg,
+                                   top_k=cfg.top_k, act=cfg.act,
+                                   capacity_factor=cfg.capacity_factor)
+            y = y.reshape(B, T, D)
+            if "shared" in p:
+                y = y + mlp_apply(p["shared"], hn2, qcfg, cfg.act)
+            aux = aux + metrics["aux_loss"]
+        else:
+            y = mlp_apply(p["mlp"], hn2, qcfg, cfg.act)
+        return h + y, aux
+    if kind == "rec":
+        h = h + rec_block_apply(p["rec"], apply_norm(p["ln1"], h, qcfg,
+                                                     cfg.norm), qcfg)
+        h = h + mlp_apply(p["mlp"], apply_norm(p["ln2"], h, qcfg, cfg.norm),
+                          qcfg, cfg.act)
+        return h, aux
+    if kind == "mlstm":
+        return h + mlstm_apply(p["cell"], apply_norm(p["ln"], h, qcfg,
+                                                     cfg.norm),
+                               qcfg, cfg.n_heads), aux
+    if kind == "slstm":
+        return h + slstm_apply(p["cell"], apply_norm(p["ln"], h, qcfg,
+                                                     cfg.norm),
+                               qcfg, cfg.n_heads), aux
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# stacks
+# --------------------------------------------------------------------------
+def _stack_init(key, cfg: LMConfig, plan, kind_override=None):
+    groups = []
+    for gi, (pattern, n_rep) in enumerate(plan):
+        pat = [kind_override or k for k in pattern]
+        gkey = jax.random.fold_in(key, gi)
+        keys = jax.random.split(gkey, n_rep * len(pat)).reshape(
+            n_rep, len(pat), 2)
+        group = {}
+        for j, kind in enumerate(pat):
+            group[f"b{j}"] = jax.vmap(
+                lambda k, kind=kind: _block_init(k, kind, cfg))(keys[:, j])
+        groups.append(group)
+    return groups
+
+
+def _remat(fn, cfg: LMConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def _stack_apply(x, groups, plan, cfg: LMConfig, qcfg: QuantConfig,
+                 positions, enc_out=None, kind_override=None):
+    aux_total = jnp.zeros((), jnp.float32)
+    for (pattern, n_rep), gp in zip(plan, groups):
+        pat = [kind_override or k for k in pattern]
+
+        def body(h, layer_params, pat=pat):
+            aux = jnp.zeros((), jnp.float32)
+            h = shard_act(h)
+            for j, kind in enumerate(pat):
+                h, a = _block_apply(h, layer_params[f"b{j}"], kind, cfg,
+                                    qcfg, positions, enc_out)
+                aux = aux + a
+            return shard_act(h), aux
+
+        if cfg.scan_layers and n_rep > 1:
+            body_fn = _remat(body, cfg)
+            x, auxs = jax.lax.scan(body_fn, x, gp)
+            aux_total = aux_total + jnp.sum(auxs)
+        else:
+            for r in range(n_rep):
+                lp = jax.tree.map(lambda a, r=r: a[r], gp)
+                x, a = _remat(body, cfg)(x, lp)
+                aux_total = aux_total + a
+    return x, aux_total
+
+
+# --------------------------------------------------------------------------
+# public API
+# --------------------------------------------------------------------------
+def _decoder_plan(cfg: LMConfig):
+    plan = block_plan(cfg)
+    if cfg.enc_layers:
+        plan = [(("dec_attn",) * len(p), n) for p, n in plan]
+    return plan
+
+
+def lm_init(key, cfg: LMConfig):
+    ks = jax.random.split(key, 5)
+    params: Dict[str, Any] = {"embed": embed_init(ks[0], cfg.vocab,
+                                                  cfg.d_model)}
+    params["blocks"] = _stack_init(ks[1], cfg, _decoder_plan(cfg))
+    params["final_ln"] = norm_init(cfg.d_model, cfg.norm)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab,
+                                       std=1.0 / math.sqrt(cfg.d_model))
+    if cfg.enc_layers:
+        enc_plan = [(("enc_attn",), cfg.enc_layers)]
+        params["encoder"] = _stack_init(ks[3], cfg, enc_plan)
+        params["enc_ln"] = norm_init(cfg.d_model, cfg.norm)
+    if cfg.frontend != "none":
+        params["frontend_proj"] = dense_init(ks[4], cfg.d_model, cfg.d_model)
+    return params
+
+
+def _encode(params, batch, cfg, qcfg):
+    """Run the encoder stack over stub frame embeddings (audio frontend)."""
+    frames = shard_act(batch["frames"].astype(COMPUTE_DTYPE))  # (B, Te, D)
+    frames = qdense(params["frontend_proj"], frames, qcfg)
+    B, Te, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(Te)[None], (B, Te))
+    enc_plan = [(("enc_attn",), cfg.enc_layers)]
+    h, _ = _stack_apply(frames, params["encoder"], enc_plan, cfg, qcfg, pos)
+    return apply_norm(params["enc_ln"], h, qcfg, cfg.norm)
+
+
+def _embed_inputs(params, batch, cfg, qcfg):
+    """Token (+ optional patch-stub) embedding. Returns (h, positions)."""
+    tok = batch["tokens"]
+    h = embed_lookup(params["embed"], tok)
+    if cfg.frontend == "patch":
+        patches = batch["patch_embeds"].astype(COMPUTE_DTYPE)  # (B, Np, D)
+        patches = qdense(params["frontend_proj"], patches, qcfg)
+        h = jnp.concatenate([patches, h], axis=1)
+    h = shard_act(h)
+    B, T, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    return h, positions
+
+
+def lm_apply(params, batch, cfg: LMConfig, qcfg: QuantConfig):
+    """Forward to final hidden states. Returns (hidden, aux_loss)."""
+    h, positions = _embed_inputs(params, batch, cfg, qcfg)
+    enc_out = _encode(params, batch, cfg, qcfg) if cfg.enc_layers else None
+    h, aux = _stack_apply(h, params["blocks"], _decoder_plan(cfg), cfg, qcfg,
+                          positions, enc_out)
+    h = apply_norm(params["final_ln"], h, qcfg, cfg.norm)
+    return h, aux
+
+
+def _head_matmul(params, h, cfg, qcfg):
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(h.dtype).T
+        return qmatmul(h, w, qcfg)
+    return qdense(params["lm_head"], h, qcfg)
+
+
+def lm_loss(params, batch, cfg: LMConfig, qcfg: QuantConfig):
+    """Mean next-token cross-entropy; logits streamed over sequence chunks.
+
+    Chunking runs along T (batch stays sharded on the data axis every
+    step); the LM-head GEMM sits inside the chunk loop so fp32 logits peak
+    at (B_local, loss_chunk, vocab_local)."""
+    h, aux = lm_apply(params, batch, cfg, qcfg)
+    labels = batch["labels"]
+    if cfg.frontend == "patch":                # loss only on the text tail
+        h = h[:, -labels.shape[1]:]
+    B, T, D = h.shape
+    mask = (labels >= 0).astype(jnp.float32)
+    lc = min(cfg.loss_chunk, T)
+    n_chunks = (T + lc - 1) // lc
+    pad = n_chunks * lc - T
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hc = h.reshape(B, n_chunks, lc, D).transpose(1, 0, 2, 3)
+    lcs = labels.reshape(B, n_chunks, lc).transpose(1, 0, 2)
+    ms = mask.reshape(B, n_chunks, lc).transpose(1, 0, 2)
+
+    def chunk(carry, xs):
+        hcx, lx, mx = xs                       # (B, lc, D), (B, lc)
+        logits = _head_matmul(params, hcx, cfg, qcfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(lx, 0)[..., None],
+                                 axis=-1)[..., 0]
+        return carry + jnp.sum((lse - ll) * mx), None
+
+    total, _ = jax.lax.scan(chunk, jnp.zeros((), jnp.float32),
+                            (hc, lcs, ms))
+    loss = total / jnp.maximum(jnp.sum(mask), 1.0)
+    metrics = {"loss": loss, "aux_loss": aux}
+    return loss + 0.01 * aux, metrics
+
+
+# --------------------------------------------------------------------------
+# decode (serving)
+# --------------------------------------------------------------------------
+def _cache_init(kind: str, cfg: LMConfig, B: int, S: int):
+    dt = COMPUTE_DTYPE
+    if kind in ("attn", "dense_attn"):
+        s = min(S, cfg.window) if cfg.window else S
+        shp = (B, s, cfg.n_kv_heads, cfg.d_head)
+        if cfg.mla:
+            return {"ckv": jnp.zeros((B, S, cfg.kv_lora), dt),
+                    "kr": jnp.zeros((B, S, cfg.rope_dim), dt)}
+        return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+    if kind == "dec_attn":
+        shp = (B, S, cfg.n_kv_heads, cfg.d_head)
+        return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+    if kind == "rec":
+        return {"conv": jnp.zeros((B, 3, cfg.d_rnn), dt),
+                "h": jnp.zeros((B, cfg.d_rnn), jnp.float32)}
+    if kind == "mlstm":
+        d_in = 2 * cfg.d_model
+        dh = d_in // cfg.n_heads
+        return {"conv": jnp.zeros((B, 3, d_in), dt),
+                "C": jnp.zeros((B, cfg.n_heads, dh, dh), jnp.float32),
+                "n": jnp.zeros((B, cfg.n_heads, dh), jnp.float32),
+                "m": jnp.full((B, cfg.n_heads), -1e30, jnp.float32)}
+    if kind == "slstm":
+        dh = cfg.d_model // cfg.n_heads
+        z = lambda: jnp.zeros((B, cfg.n_heads, dh), jnp.float32)
+        return {"c": z(), "n": z(), "m": jnp.full((B, cfg.n_heads, dh),
+                                                  -1e30, jnp.float32),
+                "h": z()}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: LMConfig, B: int, S: int):
+    plan = _decoder_plan(cfg)
+    caches = []
+    for pattern, n_rep in plan:
+        g = {}
+        for j, kind in enumerate(pattern):
+            one = _cache_init(kind, cfg, B, S)
+            g[f"b{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_rep,) + a.shape), one)
+        caches.append(g)
+    return caches
+
+
+def _block_decode(h, p, cache, kind, cfg, qcfg, pos, enc_out=None):
+    if kind in ("attn", "dense_attn", "dec_attn"):
+        hn = apply_norm(p["ln1"], h, qcfg, cfg.norm)
+        if cfg.mla:
+            a, new_cache = mla_decode(p["attn"], hn, cache, qcfg=qcfg,
+                                      n_heads=cfg.n_heads, nope=cfg.nope_dim,
+                                      rope_dim=cfg.rope_dim, v_head=cfg.v_head,
+                                      pos=pos, rope_theta=cfg.rope_theta)
+        else:
+            a, new_cache = attention_decode(
+                p["attn"], hn, cache, qcfg=qcfg, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, d_head=cfg.d_head, pos=pos,
+                window=cfg.window if kind == "attn" else 0,
+                rope_theta=cfg.rope_theta)
+        h = h + a
+        if kind == "dec_attn" and enc_out is not None:
+            hx = apply_norm(p["ln_x"], h, qcfg, cfg.norm)
+            B = h.shape[0]
+            positions = jnp.full((B, 1), pos, jnp.int32)
+            h = h + attention(p["xattn"], hx, qcfg=qcfg, n_heads=cfg.n_heads,
+                              n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+                              positions=positions, xkv=enc_out,
+                              q_chunk=1, kv_chunk=cfg.kv_chunk)
+        hn2 = apply_norm(p["ln2"], h, qcfg, cfg.norm)
+        if "moe" in p:
+            B = h.shape[0]
+            y, _ = moe_apply(p["moe"], hn2.reshape(B, -1), qcfg,
+                             top_k=cfg.top_k, act=cfg.act,
+                             capacity_factor=4.0)
+            y = y.reshape(B, 1, -1)
+            if "shared" in p:
+                y = y + mlp_apply(p["shared"], hn2, qcfg, cfg.act)
+        else:
+            y = mlp_apply(p["mlp"], hn2, qcfg, cfg.act)
+        return h + y, new_cache
+    if kind == "rec":
+        a, new_cache = rec_block_decode(
+            p["rec"], apply_norm(p["ln1"], h, qcfg, cfg.norm), cache, qcfg)
+        h = h + a
+        h = h + mlp_apply(p["mlp"], apply_norm(p["ln2"], h, qcfg, cfg.norm),
+                          qcfg, cfg.act)
+        return h, new_cache
+    if kind == "mlstm":
+        a, new_cache = mlstm_decode(p["cell"],
+                                    apply_norm(p["ln"], h, qcfg, cfg.norm),
+                                    cache, qcfg, cfg.n_heads)
+        return h + a, new_cache
+    if kind == "slstm":
+        a, new_cache = slstm_decode(p["cell"],
+                                    apply_norm(p["ln"], h, qcfg, cfg.norm),
+                                    cache, qcfg, cfg.n_heads)
+        return h + a, new_cache
+    raise ValueError(kind)
+
+
+def lm_decode_step(params, cache, tok, pos, cfg: LMConfig,
+                   qcfg: QuantConfig, enc_out=None):
+    """One decode step.  tok: (B, 1) int32; pos: scalar int32.
+
+    Returns (logits (B, vocab), new_cache)."""
+    h = shard_act(embed_lookup(params["embed"], tok))
+    plan = _decoder_plan(cfg)
+    new_caches = []
+    for (pattern, n_rep), gp, gc in zip(plan, params["blocks"], cache):
+        def body(h, xs, pattern=pattern):
+            lp, lc = xs
+            new_lc = {}
+            for j, kind in enumerate(pattern):
+                h, nc = _block_decode(h, lp[f"b{j}"], lc[f"b{j}"], kind, cfg,
+                                      qcfg, pos, enc_out)
+                new_lc[f"b{j}"] = nc
+            return h, new_lc
+
+        if cfg.scan_layers and n_rep > 1:
+            h, new_gc = jax.lax.scan(body, h, (gp, gc))
+        else:
+            new_gc_list = []
+            for r in range(n_rep):
+                lp = jax.tree.map(lambda a, r=r: a[r], gp)
+                lc = jax.tree.map(lambda a, r=r: a[r], gc)
+                h, nc = body(h, (lp, lc))
+                new_gc_list.append(nc)
+            new_gc = jax.tree.map(lambda *xs: jnp.stack(xs), *new_gc_list)
+        new_caches.append(new_gc)
+    h = apply_norm(params["final_ln"], h, qcfg, cfg.norm)
+    logits = _head_matmul(params, h[:, 0], cfg, qcfg)
+    return logits, new_caches

@@ -1,0 +1,317 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Per the assigned config (xlstm-1.3b: 48 blocks, d_model=2048, 4 heads,
+d_ff=0) the FFN lives *inside* the blocks: the mLSTM block carries a
+projection factor 2 up/down path; the sLSTM block is followed by a GeGLU
+FFN with factor 4/3 (xLSTM paper conventions).
+
+Cell recurrences are exponential-gated with the max-stabilizer state m_t
+(xLSTM Eq. 15-19) and are *vector* ops — kept bf16/fp32 per the paper's
+App. A; the surrounding q/k/v/gate/up/down projections are MX GEMMs.
+Training runs a lax.scan over time (sequential; the chunkwise-parallel
+TFLA form is a recorded hillclimb candidate); decode is the O(1) step.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig
+from .layers import dense_init, norm_init, apply_norm, qdense, trunc_normal
+from .mlp import mlp_init, mlp_apply
+
+__all__ = ["mlstm_init", "mlstm_apply", "mlstm_decode",
+           "slstm_init", "slstm_apply", "slstm_decode"]
+
+_PF = 2            # mLSTM projection factor
+_CONV_W = 4
+
+
+def _conv1d(w, b, x, state=None):
+    if state is None:
+        pads = jnp.zeros_like(x[:, :1])
+        y = w[-1] * x
+        shifted = x
+        for j in range(1, _CONV_W):
+            shifted = jnp.concatenate([pads, shifted[:, :-1]], 1)
+            y = y + w[_CONV_W - 1 - j] * shifted
+        new_state = None
+    else:
+        full = jnp.concatenate([state, x], 1)
+        y = sum(w[j] * full[:, j:j + x.shape[1]] for j in range(_CONV_W))
+        new_state = full[:, -(_CONV_W - 1):]
+    return y + b, new_state
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+def mlstm_init(key, d_model: int, n_heads: int, n_layers: int = 1):
+    d_in = _PF * d_model
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": dense_init(ks[0], d_model, 2 * d_in),
+        "conv_w": trunc_normal(ks[1], (_CONV_W, d_in), 0.5),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "w_q": dense_init(ks[2], d_in, d_in),
+        "w_k": dense_init(ks[3], d_in, d_in),
+        "w_v": dense_init(ks[4], d_in, d_in),
+        "w_i": dense_init(ks[5], d_in, n_heads),
+        "w_f": dense_init(ks[6], d_in, n_heads),
+        "skip_scale": jnp.ones((d_in,), jnp.float32),
+        "out_ln": norm_init(d_in),
+        "w_down": dense_init(ks[7], d_in, d_model,
+                             std=1.0 / math.sqrt(d_in * 2 * n_layers)),
+    }
+
+
+def _mlstm_cell_step(carry, inp):
+    """One step of the stabilized mLSTM recurrence (per head).
+
+    carry: C (B,H,dk,dv), n (B,H,dk), m (B,H)
+    inp:   q,k,v (B,H,d*), i,f pre-activations (B,H)
+    """
+    C, n, m, = carry
+    q, k, v, it, ft = inp
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_g = jnp.exp(it - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    C = f_g[..., None, None] * C + i_g[..., None, None] \
+        * (k[..., :, None] * v[..., None, :])
+    n = f_g[..., None] * n + i_g[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                        jnp.exp(-m_new))
+    h = jnp.einsum("bhkv,bhk->bhv", C, q) / denom[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_scan(q, k, v, it, ft, state=None):
+    """q,k,v: (B,T,H,dh) fp32; it/ft: (B,T,H). Returns h (B,T,H,dh), state."""
+    B, T, H, dh = q.shape
+    if state is None:
+        state = (jnp.zeros((B, H, dh, dh), jnp.float32),
+                 jnp.zeros((B, H, dh), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), it.transpose(1, 0, 2),
+          ft.transpose(1, 0, 2))
+    state, h = jax.lax.scan(_mlstm_cell_step, state, xs)
+    return h.transpose(1, 0, 2, 3), state
+
+
+MLSTM_CHUNK = 64
+
+
+def _mlstm_chunkwise(q, k, v, it, ft, state=None, chunk: int = MLSTM_CHUNK):
+    """Chunkwise-parallel stabilized mLSTM (TFLA-style).
+
+    The per-timestep recurrence reads+writes the (dk, dv) matrix memory
+    every step — HBM traffic ~ T·dk·dv per head, which the roofline showed
+    to be 1000x off for train/prefill shapes.  Chunking keeps the state
+    resident across a chunk of W steps: traffic drops by W, compute turns
+    into two GEMMs per chunk (intra-chunk (W,W) attention-like scores with
+    gate-derived decay weights + inter-chunk state read), exactly matching
+    the recurrent semantics at chunk boundaries (validated in
+    tests/test_xlstm_chunkwise.py).
+
+      g_i   = cumsum(log f)               (within chunk)
+      m_c   = max(m_prev, max_j(i_j - g_j));  M_i = g_i + m_c
+      num_i = e^{m_prev-m_c} q_i C̃ + Σ_{j≤i}(q_i·k_j) e^{i_j-g_j-m_c} v_j
+      den_i = e^{m_prev-m_c} q_i ñ + Σ_{j≤i}(q_i·k_j) e^{i_j-g_j-m_c}
+      h_i   = num_i / max(|den_i|, e^{-M_i})
+      C̃'   = e^{m_prev-m_c} C̃ + Σ_j e^{i_j-g_j-m_c} k_j v_jᵀ ;  m' = G + m_c
+    """
+    B, T, H, dh = q.shape
+    W = min(chunk, T)
+    if T % W:
+        pad = (-T) % W
+        zpad = lambda x: jnp.pad(  # noqa: E731
+            x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v, it = map(zpad, (q, k, v, it))
+        # padded steps must be exact no-ops: f=1 (no decay of the carried
+        # state) and i=-inf (no write), so the returned state corresponds
+        # to step T exactly
+        ft = jnp.pad(ft, ((0, 0), (0, pad), (0, 0)))
+        ft = ft.at[:, T:].set(1e30)
+        it = it.at[:, T:].set(-1e30)
+    Tp = q.shape[1]
+    nc = Tp // W
+    if state is None:
+        state = (jnp.zeros((B, H, dh, dh), jnp.float32),
+                 jnp.zeros((B, H, dh), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+
+    # (nc, B, H, W, d)
+    cs = lambda x: x.reshape(B, nc, W, H, -1).transpose(1, 0, 3, 2, 4)  # noqa: E731
+    qc, kc, vc = cs(q), cs(k), cs(v)
+    itc = it.reshape(B, nc, W, H).transpose(1, 0, 3, 2)
+    ftc = ft.reshape(B, nc, W, H).transpose(1, 0, 3, 2)
+
+    causal = jnp.tril(jnp.ones((W, W), jnp.float32))
+
+    def chunk_step(carry, xs):
+        C, n, m_prev = carry
+        qt, kt, vt, itx, ftx = xs                 # (B,H,W,*)
+        logf = jax.nn.log_sigmoid(ftx)
+        g = jnp.cumsum(logf, axis=-1)             # (B,H,W)
+        G = g[..., -1]
+        a = itx - g                               # i_j - g_j
+        # per-row running stabilizer == the recurrent m_i (exactness when
+        # the denominator floor binds)
+        m_row = jnp.maximum(m_prev[..., None],
+                            jax.lax.cummax(a, axis=a.ndim - 1))  # (B,H,W)
+        # mask BEFORE exp: future (j > i) entries can overflow exp and
+        # produce inf * 0 = NaN if masked after
+        expo = jnp.where(causal.astype(bool),
+                         a[..., None, :] - m_row[..., :, None], -jnp.inf)
+        w2 = jnp.exp(expo)
+        inter = jnp.exp(m_prev[..., None] - m_row)           # (B,H,W)
+        s = jnp.einsum("bhid,bhjd->bhij", qt, kt)
+        sw = s * w2
+        num = (inter[..., None]
+               * jnp.einsum("bhid,bhdv->bhiv", qt, C)
+               + jnp.einsum("bhij,bhjv->bhiv", sw, vt))
+        den = (inter * jnp.einsum("bhid,bhd->bhi", qt, n)
+               + jnp.sum(sw, axis=-1))
+        M = g + m_row
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-M))[..., None]
+        # carry with the chunk-end stabilizer (= recurrent m at chunk end)
+        m_c = m_row[..., -1]
+        w = jnp.exp(a - m_c[..., None])
+        ic = jnp.exp(m_prev - m_c)
+        C_new = (ic[..., None, None] * C
+                 + jnp.einsum("bhj,bhjd,bhjv->bhdv", w, kt, vt))
+        n_new = ic[..., None] * n + jnp.einsum("bhj,bhjd->bhd", w, kt)
+        return (C_new, n_new, G + m_c), h
+
+    state, hs = jax.lax.scan(chunk_step, state, (qc, kc, vc, itc, ftc))
+    # (nc, B, H, W, dv) -> (B, T, H, dv)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, Tp, H, dh)[:, :T]
+    return h, state
+
+
+def _mlstm_qkvif(p, u, qcfg, n_heads):
+    B, T, d_in = u.shape
+    dh = d_in // n_heads
+    q = qdense(p["w_q"], u, qcfg).reshape(B, T, n_heads, dh).astype(jnp.float32)
+    k = qdense(p["w_k"], u, qcfg).reshape(B, T, n_heads, dh).astype(jnp.float32)
+    k = k / math.sqrt(dh)
+    v = qdense(p["w_v"], u, qcfg).reshape(B, T, n_heads, dh).astype(jnp.float32)
+    it = qdense(p["w_i"], u, qcfg).astype(jnp.float32)
+    ft = qdense(p["w_f"], u, qcfg).astype(jnp.float32) + 3.0  # forget-bias
+    return q, k, v, it, ft
+
+
+def mlstm_apply(p, x: jax.Array, qcfg: QuantConfig, n_heads: int) -> jax.Array:
+    B, T, D = x.shape
+    up = qdense(p["w_up"], x, qcfg)
+    u, z = jnp.split(up, 2, axis=-1)
+    u_c, _ = _conv1d(p["conv_w"].astype(u.dtype), p["conv_b"].astype(u.dtype), u)
+    u_c = jax.nn.silu(u_c)
+    q, k, v, it, ft = _mlstm_qkvif(p, u_c, qcfg, n_heads)
+    if T >= 2 * MLSTM_CHUNK:
+        h, _ = _mlstm_chunkwise(q, k, v, it, ft)
+    else:
+        h, _ = _mlstm_scan(q, k, v, it, ft)
+    h = h.reshape(B, T, -1).astype(x.dtype)
+    h = apply_norm(p["out_ln"], h, qcfg) + p["skip_scale"].astype(x.dtype) * u_c
+    y = h * jax.nn.silu(z)
+    return qdense(p["w_down"], y, qcfg)
+
+
+def mlstm_decode(p, x: jax.Array, cache: dict, qcfg: QuantConfig,
+                 n_heads: int):
+    """x: (B,1,D); cache: {"conv": (B,3,d_in), "C","n","m"}."""
+    up = qdense(p["w_up"], x, qcfg)
+    u, z = jnp.split(up, 2, axis=-1)
+    u_c, conv_state = _conv1d(p["conv_w"].astype(u.dtype),
+                              p["conv_b"].astype(u.dtype), u, cache["conv"])
+    u_c = jax.nn.silu(u_c)
+    q, k, v, it, ft = _mlstm_qkvif(p, u_c, qcfg, n_heads)
+    state = (cache["C"], cache["n"], cache["m"])
+    state, h = _mlstm_cell_step(state, (q[:, 0], k[:, 0], v[:, 0],
+                                        it[:, 0], ft[:, 0]))
+    h = h.reshape(x.shape[0], 1, -1).astype(x.dtype)
+    h = apply_norm(p["out_ln"], h, qcfg) + p["skip_scale"].astype(x.dtype) * u_c
+    y = h * jax.nn.silu(z)
+    out = qdense(p["w_down"], y, qcfg)
+    return out, {"conv": conv_state, "C": state[0], "n": state[1],
+                 "m": state[2]}
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+def slstm_init(key, d_model: int, n_heads: int, n_layers: int = 1):
+    ks = jax.random.split(key, 4)
+    dh = d_model // n_heads
+    d_ff = int(4 * d_model / 3 / 32) * 32
+    return {
+        "w_gates": dense_init(ks[0], d_model, 4 * d_model),  # i,f,z,o
+        "r_gates": trunc_normal(ks[1], (n_heads, dh, 4 * dh),
+                                1.0 / math.sqrt(dh)),
+        "ffn_ln": norm_init(d_model),
+        "ffn": mlp_init(ks[2], d_model, d_ff, act="geglu", n_layers=n_layers),
+        "out_ln": norm_init(d_model),
+        "w_out": dense_init(ks[3], d_model, d_model,
+                            std=1.0 / math.sqrt(d_model * 2 * n_layers)),
+    }
+
+
+def _slstm_step(p_r, carry, wx_t, n_heads):
+    """carry: c,n,m,h — all (B,H,dh). wx_t: (B, 4*D) input preactivation."""
+    c, n, m, h = carry
+    B = wx_t.shape[0]
+    dh = c.shape[-1]
+    rec = jnp.einsum("bhd,hde->bhe", h, p_r)            # (B,H,4*dh)
+    z_all = wx_t.reshape(B, 4, n_heads, dh).transpose(0, 2, 1, 3) \
+        .reshape(B, n_heads, 4 * dh) + rec
+    it, ft, zt, ot = jnp.split(z_all, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_g = jnp.exp(it - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    c = f_g * c + i_g * jnp.tanh(zt)
+    n = f_g * n + i_g
+    h_new = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+    return (c, n, m_new, h_new), h_new
+
+
+def slstm_apply(p, x: jax.Array, qcfg: QuantConfig, n_heads: int) -> jax.Array:
+    B, T, D = x.shape
+    dh = D // n_heads
+    wx = qdense(p["w_gates"], x, qcfg).astype(jnp.float32)   # (B,T,4D)
+    p_r = p["r_gates"].astype(jnp.float32)
+    carry = tuple(jnp.zeros((B, n_heads, dh), jnp.float32) for _ in range(2)) \
+        + (jnp.full((B, n_heads, dh), -1e30, jnp.float32),
+           jnp.zeros((B, n_heads, dh), jnp.float32))
+    carry = (carry[0], carry[1], carry[2], carry[3])
+
+    def step(carry, wx_t):
+        return _slstm_step(p_r, carry, wx_t, n_heads)
+
+    _, h = jax.lax.scan(step, carry, wx.transpose(1, 0, 2))
+    h = h.transpose(1, 0, 2, 3).reshape(B, T, D).astype(x.dtype)
+    y = qdense(p["w_out"], apply_norm(p["out_ln"], h, qcfg), qcfg)
+    # post-FFN (GeGLU 4/3) with pre-norm residual
+    y = y + mlp_apply(p["ffn"], apply_norm(p["ffn_ln"], y, qcfg), qcfg,
+                      act="geglu")
+    return y
+
+
+def slstm_decode(p, x: jax.Array, cache: dict, qcfg: QuantConfig,
+                 n_heads: int):
+    B, _, D = x.shape
+    wx = qdense(p["w_gates"], x, qcfg).astype(jnp.float32)[:, 0]
+    carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    carry, h = _slstm_step(p["r_gates"].astype(jnp.float32), carry, wx,
+                           n_heads)
+    h = h.reshape(B, 1, D).astype(x.dtype)
+    y = qdense(p["w_out"], apply_norm(p["out_ln"], h, qcfg), qcfg)
+    y = y + mlp_apply(p["ffn"], apply_norm(p["ffn_ln"], y, qcfg), qcfg,
+                      act="geglu")
+    return y, {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}

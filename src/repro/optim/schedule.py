@@ -1,0 +1,23 @@
+"""LR schedules.  Paper App. D: linear warmup 2e-5 → 2e-4, cosine → 2e-5."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant"]
+
+
+def warmup_cosine(step, total_steps: int, peak: float = 2e-4,
+                  init: float = 2e-5, end: float = 2e-5,
+                  warmup_frac: float = 0.05):
+    warmup = max(int(total_steps * warmup_frac), 1)
+    step = jnp.asarray(step, jnp.float32)
+    wu = init + (peak - init) * (step / warmup)
+    t = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+    cos = end + 0.5 * (peak - end) * (1.0 + jnp.cos(math.pi * t))
+    return jnp.where(step < warmup, wu, cos)
+
+
+def constant(step, lr: float):
+    return jnp.full((), lr, jnp.float32)

@@ -1,0 +1,7 @@
+from .sharding import (batch_axes, batch_pspecs, cache_pspecs, param_pspecs,
+                       param_shardings, shardings_like)
+from .compression import compressed_psum, compression_error
+
+__all__ = ["batch_axes", "batch_pspecs", "cache_pspecs", "param_pspecs",
+           "param_shardings", "shardings_like", "compressed_psum",
+           "compression_error"]

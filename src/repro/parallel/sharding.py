@@ -1,0 +1,247 @@
+"""Named sharding rules: DP/FSDP on "data", TP/EP on "model", DP on "pod".
+
+Baseline scheme (per DESIGN.md §5):
+  * column-parallel projections (D→X): P("data", "model")  — FSDP on the
+    contraction dim, TP on the output dim;
+  * row-parallel projections (X→D):    P("model", "data");
+  * expert tensors (E, D, F):          P("model", "data", None) — expert
+    parallelism on the model axis;
+  * embeddings / LM head (V|D dims):   P("data", "model");
+  * norms / biases / scalars:          replicated;
+  * the "pod" axis never shards parameters (pure cross-pod DP).
+
+Stacked layer params (under 'blocks'/'encoder', leading n_rep axis from
+scan-over-layers) get a leading None.  The same rule function shards the
+optimizer state (m/v/master mirror the param tree).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional  # noqa: F401
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["param_pspecs", "param_shardings", "batch_pspecs",
+           "cache_pspecs", "shardings_like", "batch_axes",
+           "activation_sharding", "shard_act", "shard_spec"]
+
+# col-parallel leaf container names (weight "w" inside them)
+_COL = {"wq", "wk", "wv", "w_up", "w_gate", "w_main", "w_gates", "w_dq",
+        "w_uq", "w_kr", "w_q", "w_k", "w_v", "lm_head", "frontend_proj"}
+_ROW = {"wo", "w_down", "w_out"}
+_SMALL_COL = {"w_dkv", "w_uk", "w_uv", "w_i", "w_f", "w_r"}  # small dims
+
+
+def _names(path) -> list:
+    s = jax.tree_util.keystr(path)
+    return re.findall(r"'([^']+)'", s)
+
+
+def _fit(spec: tuple, shape: tuple, mesh: Optional[Mesh]) -> tuple:
+    """Drop axis assignments whose mesh size does not divide the dim.
+
+    Explicit in_shardings require exact divisibility (unlike propagation,
+    which pads); e.g. 4 KV heads cannot shard over model=16, so that dim
+    falls back to replicated and the seq dim picks up the axis if it can
+    (handled by callers)."""
+    if mesh is None:
+        return spec
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        out.append(ax if dim % n == 0 else None)
+    return tuple(out)
+
+
+def _spec_for(path, leaf, mesh: Optional[Mesh] = None) -> P:
+    names = _names(path)
+    stacked = ("blocks" in names) or ("encoder" in names)
+    shape = leaf.shape
+    nd = len(shape) - (1 if stacked else 0)
+    spec: tuple
+    leafname = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    holder = parent if leafname in ("w", "b") else leafname
+
+    if nd <= 1:
+        spec = (None,) * nd
+    elif holder == "embed" or leafname == "table":
+        spec = ("data", "model")
+    elif holder == "router":
+        spec = (None, None)
+    elif nd == 3 and holder in ("w_up", "w_gate", "w_down"):
+        # stacked expert tensors (E, D, F) / (E, F, D)
+        spec = ("model", "data", None) if holder != "w_down" \
+            else ("model", None, "data")
+    elif nd == 3 and holder == "r_gates":
+        spec = (None, None, "model")
+    elif holder in _ROW:
+        spec = ("model", "data") + (None,) * (nd - 2)
+    elif holder in _COL:
+        spec = ("data", "model") + (None,) * (nd - 2)
+    elif holder in _SMALL_COL:
+        spec = (None, "model") + (None,) * (nd - 2)
+    elif holder == "conv_w":
+        spec = (None, "model")
+    else:
+        spec = (None,) * nd
+    if stacked:
+        spec = (None,) + spec
+    return P(*_fit(spec, shape, mesh))
+
+
+def param_pspecs(tree, mesh: Optional[Mesh] = None) -> Any:
+    """PartitionSpec pytree matching ``tree`` (params or optimizer state)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _spec_for(p, l, mesh), tree)
+
+
+def param_shardings(tree, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(tree, mesh))
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _batch_divisible(B: int, mesh: Mesh) -> bool:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return B % n == 0
+
+
+def batch_pspecs(batch_tree, mesh: Mesh) -> Any:
+    """Shard the batch dim over (pod, data); B=1 long-context cells shard
+    the sequence dim over "data" instead (sequence parallelism)."""
+    ba = batch_axes(mesh)
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        B = shape[0]
+        if _batch_divisible(B, mesh):
+            return P(ba, *([None] * (len(shape) - 1)))
+        if len(shape) >= 2 and shape[1] % mesh.shape["data"] == 0 \
+                and shape[1] > 1:
+            return P(None, "data", *([None] * (len(shape) - 2)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_pspecs(cache_tree, mesh: Mesh) -> Any:
+    """Decode-cache shardings.  Leading n_rep (stacked layers) unsharded;
+    batch over (pod, data) when divisible; heads/features over "model"."""
+    ba = batch_axes(mesh)
+
+    def spec(path, leaf):
+        names = _names(path)
+        shape = leaf.shape              # (n_rep, B, ...)
+        B = shape[1] if len(shape) > 1 else 1
+        bspec = ba if _batch_divisible(B, mesh) else None
+        name = names[-1] if names else ""
+        rest = len(shape) - 2
+        if name in ("k", "v"):          # (n_rep, B, S, Hkv, dh)
+            s = _fit((None, bspec, None, "model", None), shape, mesh)
+            if s[3] is None:            # few KV heads: shard seq instead
+                s = _fit((None, bspec, "model", None, None), shape, mesh)
+            return P(*s)
+        if name in ("ckv", "kr"):       # (n_rep, B, S, c)
+            s = _fit((None, bspec, None, "model"), shape, mesh)
+            if s[3] is None:            # small latent: shard seq
+                s = _fit((None, bspec, "model", None), shape, mesh)
+            return P(*s)
+        if name == "conv":              # (n_rep, B, 3, d)
+            return P(*_fit((None, bspec, None, "model"), shape, mesh))
+        if name == "h" and rest == 1:   # (n_rep, B, d)
+            return P(*_fit((None, bspec, "model"), shape, mesh))
+        if name == "C":                 # (n_rep, B, H, dk, dv)
+            return P(*_fit((None, bspec, None, None, "model"), shape,
+                           mesh))
+        if name in ("n", "c", "m", "h"):
+            s = (None, bspec) + (None,) * (rest - 1) + \
+                (("model",) if rest >= 2 else ())
+            return P(*_fit(s[:len(shape)], shape, mesh))
+        return P(*_fit((None, bspec) + (None,) * rest, shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def shardings_like(pspec_tree, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# Activation sharding constraints (Megatron/MaxText convention).
+#
+# GSPMD's propagation can leave activations *replicated* over the data axis
+# (e.g. after a gather from a vocab-sharded embedding) — measured 16x temp
+# memory and ~6x FLOPs on the first dry-run cell.  Model code calls
+# shard_act() on block inputs/outputs; inside an `activation_sharding(mesh)`
+# context this pins (B, T, ...) activations to batch-over-(pod, data)
+# (sequence-over-data for B==1 long-context cells); outside any context
+# it is the identity, so single-device runs are untouched.
+# --------------------------------------------------------------------------
+import contextlib
+import contextvars
+
+_ACT_MESH: contextvars.ContextVar[Optional[Mesh]] = \
+    contextvars.ContextVar("act_mesh", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh):
+    token = _ACT_MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _ACT_MESH.reset(token)
+
+
+def shard_spec(x, spec_axes):
+    """Constrain ``x`` to an explicit spec under the activation context.
+
+    ``spec_axes`` entries: "batch" -> the (pod, data) batch axes, any mesh
+    axis name, or None.  Dims that do not divide fall back to replicated.
+    Identity outside an activation_sharding context."""
+    mesh = _ACT_MESH.get()
+    if mesh is None:
+        return x
+    ba = batch_axes(mesh)
+    spec = tuple(ba if a == "batch" else a for a in spec_axes)
+    spec = _fit(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def shard_act(x, feature_axis: Optional[str] = None):
+    """Constrain an activation (B, T, ...) or (B, ...) tensor."""
+    mesh = _ACT_MESH.get()
+    if mesh is None or x.ndim < 2:
+        return x
+    ba = batch_axes(mesh)
+    B = x.shape[0]
+    tail = [None] * (x.ndim - 1)
+    if feature_axis is not None:
+        tail[-1] = feature_axis
+    if _batch_divisible(B, mesh):
+        spec = P(ba, *tail)
+    elif x.ndim >= 2 and x.shape[1] % mesh.shape["data"] == 0 \
+            and x.shape[1] > 1:
+        spec = P(None, "data", *tail[1:])
+    else:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))

@@ -1,0 +1,3 @@
+from .decode import generate, prefill_into_cache
+
+__all__ = ["generate", "prefill_into_cache"]

@@ -1,0 +1,5 @@
+from .checkpoint import Checkpointer, latest_step, restore, save
+from .loop import Trainer, TrainerConfig, make_train_step
+
+__all__ = ["Checkpointer", "latest_step", "restore", "save",
+           "Trainer", "TrainerConfig", "make_train_step"]

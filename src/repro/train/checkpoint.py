@@ -1,0 +1,134 @@
+"""Versioned, async, elastic checkpointing.
+
+Arrays are saved *logically unsharded* (np.asarray gathers), so a
+checkpoint written on any mesh restores onto any other mesh/device count —
+this is what makes restart elastic (scale-up/down between failures).
+Writes happen in a background thread against a temp file that is atomically
+renamed, so a crash mid-write can never corrupt the newest checkpoint;
+`latest_step` only ever sees fully written versions.  Retention keeps the
+last N checkpoints (rollback targets for the instability-recovery policy).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "Checkpointer"]
+
+
+_BF16 = "BF16::"  # npz has no native bfloat16: stored as uint16 bit pattern
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            out[_BF16 + key] = arr.view(np.uint16)
+        else:
+            out[key] = arr
+    return out
+
+
+def _unflatten_like(template, data: Dict[str, np.ndarray]):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if _BF16 + key in data:
+            arr = data[_BF16 + key].view(jnp.bfloat16)
+        elif key in data:
+            arr = data[key]
+        else:
+            raise KeyError(f"checkpoint missing {key}")
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        want = np.asarray(leaf).dtype if hasattr(leaf, "dtype") else arr.dtype
+        leaves.append(np.asarray(jnp.asarray(arr).astype(want)))
+    return jax.tree_util.tree_unflatten(
+        treedef, [l for _, l in zip(flat, leaves)])
+
+
+def save(ckpt_dir: str, step: int, tree, meta: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step:08d}.npz")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    np.savez(tmp, **_flatten(tree))
+    if meta is not None:
+        with open(os.path.join(ckpt_dir, f"step_{step:08d}.json"), "w") as f:
+            json.dump(meta, f)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(f[5:-4]) for f in os.listdir(ckpt_dir)
+             if f.startswith("step_") and f.endswith(".npz")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, template, step: Optional[int] = None
+            ) -> Tuple[Any, dict, int]:
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    with np.load(path) as z:
+        data = {k: z[k] for k in z.files}
+    meta_path = os.path.join(ckpt_dir, f"step_{step:08d}.json")
+    meta = {}
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            meta = json.load(f)
+    return _unflatten_like(template, data), meta, step
+
+
+class Checkpointer:
+    """Async writer with retention.  `save()` returns immediately; the
+    previous write is joined first (at most one outstanding write)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree, meta: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # device->host sync here
+
+        def _write():
+            save(self.dir, step, host_tree, meta)
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(int(f[5:-4]) for f in os.listdir(self.dir)
+                       if f.startswith("step_") and f.endswith(".npz"))
+        for s in steps[:-self.keep]:
+            for ext in (".npz", ".json"):
+                p = os.path.join(self.dir, f"step_{s:08d}{ext}")
+                if os.path.exists(p):
+                    os.remove(p)
+
+    def steps(self) -> List[int]:
+        self.wait()
+        return sorted(int(f[5:-4]) for f in os.listdir(self.dir)
+                      if f.startswith("step_") and f.endswith(".npz"))

@@ -1,0 +1,176 @@
+"""Fault-tolerant training loop with paper-driven instability recovery.
+
+The paper shows (Fig. 7) that an impending MX divergence can be averted by
+switching the precision scheme mid-training *before* the loss blows up.
+This loop operationalizes that as a fault-tolerance policy:
+
+  1. watchdog: SpikeDetector on loss + gradient norm (App. B heuristic);
+  2. on trigger: roll back to the last good checkpoint (async, versioned);
+  3. apply the configured intervention (default: "bf16_activations", the
+     paper's strongest immediate stabilizer) — this swaps the static
+     QuantConfig, recompiling the step function, and training resumes
+     from the rollback step with the identical data stream (step-indexed
+     batches make the replay exact);
+  4. events are recorded for the run report.
+
+Node-failure recovery falls out of the same machinery: restart the binary,
+`Trainer.restore()` picks the newest complete checkpoint and the data
+pipeline fast-forwards by step index (elastic across device counts since
+checkpoints are logically unsharded).  A step-time monitor flags straggler
+steps (>k× rolling median).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig, SpikeDetector, apply_intervention
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+
+__all__ = ["TrainerConfig", "Trainer", "make_train_step"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 1000
+    peak_lr: float = 2e-4
+    init_lr: float = 2e-5
+    end_lr: float = 2e-5
+    warmup_frac: float = 0.05
+    ckpt_every: int = 200
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+    # instability watchdog / recovery
+    spike_factor: float = 100.0
+    grad_factor: float = 50.0
+    auto_intervention: Optional[str] = "bf16_activations"
+    max_recoveries: int = 3
+    # straggler monitor
+    straggler_factor: float = 3.0
+    log_every: int = 50
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig,
+                    tcfg: TrainerConfig):
+    """loss_fn(params, batch, qcfg) -> (loss, metrics).  Returns a function
+    (params, opt_state, batch, step, qcfg[static]) -> (params, opt_state,
+    metrics), jitted with qcfg static so interventions recompile cleanly."""
+
+    def step_fn(params, opt_state, batch, step, qcfg: QuantConfig):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, qcfg)
+        lr = warmup_cosine(step, tcfg.total_steps, tcfg.peak_lr, tcfg.init_lr,
+                           tcfg.end_lr, tcfg.warmup_frac)
+        params, opt_state, om = adamw_update(grads, opt_state, params, lr,
+                                             opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["lr"] = lr
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return jax.jit(step_fn, static_argnums=(4,), donate_argnums=(0, 1))
+
+
+class Trainer:
+    def __init__(self, loss_fn, params, qcfg: QuantConfig,
+                 batch_fn: Callable[[int], Any],
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 tcfg: Optional[TrainerConfig] = None):
+        self.tcfg = tcfg or TrainerConfig()
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.loss_fn = loss_fn
+        self.batch_fn = batch_fn
+        self.qcfg = qcfg
+        self.params = params
+        self.opt_state = adamw_init(params, self.opt_cfg)
+        self.step = 0
+        self.detector = SpikeDetector(self.tcfg.spike_factor,
+                                      self.tcfg.grad_factor)
+        self._step_fn = make_train_step(loss_fn, self.opt_cfg, self.tcfg)
+        self.history: List[Dict[str, float]] = []
+        self.events: List[Dict[str, Any]] = []
+        self._ckptr = None
+        if self.tcfg.ckpt_dir:
+            from .checkpoint import Checkpointer
+            self._ckptr = Checkpointer(self.tcfg.ckpt_dir,
+                                       self.tcfg.keep_ckpts)
+        self._recoveries = 0
+        self._step_times: List[float] = []
+
+    # ---- checkpoint / restore --------------------------------------------
+    def _tree(self):
+        return {"params": self.params, "opt": self.opt_state}
+
+    def checkpoint(self):
+        if self._ckptr:
+            self._ckptr.save(self.step, self._tree(),
+                             {"step": self.step,
+                              "qcfg": self.qcfg.describe()})
+
+    def restore(self, step: Optional[int] = None) -> bool:
+        if not self._ckptr:
+            return False
+        from .checkpoint import restore, latest_step
+        self._ckptr.wait()
+        s = latest_step(self.tcfg.ckpt_dir) if step is None else step
+        if s is None:
+            return False
+        tree, meta, s = restore(self.tcfg.ckpt_dir, self._tree(), s)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.step = s
+        return True
+
+    # ---- recovery policy --------------------------------------------------
+    def _recover(self, reason: str):
+        rolled = self.restore()
+        old = self.qcfg.describe()
+        if (self.tcfg.auto_intervention
+                and self._recoveries < self.tcfg.max_recoveries):
+            self.qcfg = apply_intervention(self.qcfg,
+                                           self.tcfg.auto_intervention)
+        self._recoveries += 1
+        self.detector = SpikeDetector(self.tcfg.spike_factor,
+                                      self.tcfg.grad_factor)
+        self.events.append({
+            "step": self.step, "event": "recovery", "reason": reason,
+            "rolled_back": rolled, "from_qcfg": old,
+            "to_qcfg": self.qcfg.describe()})
+
+    # ---- main loop ---------------------------------------------------------
+    def run(self, n_steps: Optional[int] = None):
+        end = self.step + (n_steps or self.tcfg.total_steps)
+        while self.step < end:
+            t0 = time.monotonic()
+            batch = self.batch_fn(self.step)
+            self.params, self.opt_state, metrics = self._step_fn(
+                self.params, self.opt_state, batch,
+                jnp.asarray(self.step), self.qcfg)
+            loss = float(metrics["loss"])
+            gnorm = float(metrics["grad_norm"])
+            dt = time.monotonic() - t0
+            self._step_times.append(dt)
+            med = sorted(self._step_times[-64:])[
+                len(self._step_times[-64:]) // 2]
+            rec = {"step": self.step, "loss": loss, "grad_norm": gnorm,
+                   "lr": float(metrics["lr"]), "time_s": dt}
+            if dt > self.tcfg.straggler_factor * med and len(
+                    self._step_times) > 8:
+                self.events.append({"step": self.step, "event": "straggler",
+                                    "time_s": dt, "median_s": med})
+            self.history.append(rec)
+            spiked = self.detector.update(loss, gnorm)
+            if spiked and self._ckptr:
+                self._recover(f"spike@step{self.step}: loss={loss:.4g}")
+                continue
+            self.step += 1
+            if self._ckptr and self.step % self.tcfg.ckpt_every == 0:
+                self.checkpoint()
+        if self._ckptr:
+            self.checkpoint()
+            self._ckptr.wait()
+        return self.history

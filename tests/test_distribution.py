@@ -1,0 +1,151 @@
+"""Distribution tests: sharding rules + multi-device equivalence.
+
+Multi-device tests spawn subprocesses (device count is locked at first jax
+init, so the main test process stays single-device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from jax.sharding import PartitionSpec as P
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def test_param_pspec_rules():
+    from repro.configs import get_config
+    from repro.models import lm_init
+    from repro.parallel import param_pspecs
+    cfg = get_config("qwen2-7b", "smoke")
+    shapes = jax.eval_shape(lambda: lm_init(jax.random.PRNGKey(0), cfg))
+    specs = param_pspecs(shapes)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    by_name = {jax.tree_util.keystr(p): s for p, s in flat}
+    def find(sub):
+        return [v for k, v in by_name.items() if sub in k]
+    assert all(s == P("data", "model") for s in find("'embed'"))
+    # stacked block weights get a leading None
+    wq = [v for k, v in by_name.items() if "'wq'" in k and "'w'" in k]
+    assert wq and all(s == P(None, "data", "model") for s in wq)
+    wo = [v for k, v in by_name.items() if "'wo'" in k and "'w'" in k]
+    assert wo and all(s == P(None, "model", "data") for s in wo)
+
+
+def test_moe_expert_pspecs():
+    from repro.configs import get_config
+    from repro.models import lm_init
+    from repro.parallel import param_pspecs
+    cfg = get_config("moonshot-v1-16b-a3b", "smoke")
+    shapes = jax.eval_shape(lambda: lm_init(jax.random.PRNGKey(0), cfg))
+    specs = param_pspecs(shapes)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    ups = [s for p, s in flat
+           if "'moe'" in jax.tree_util.keystr(p)
+           and "'w_up'" in jax.tree_util.keystr(p)]
+    assert ups and all(s == P(None, "model", "data", None) for s in ups)
+
+
+_EQUIV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, json
+    from repro.configs import get_config
+    from repro.core import preset
+    from repro.data.synthetic import lm_input_arrays
+    from repro.models import lm_init, lm_loss
+    from repro.parallel import batch_pspecs, param_pspecs, shardings_like
+    from repro.parallel.sharding import activation_sharding
+
+    cfg = get_config("qwen2-7b", "smoke")
+    qcfg = preset("mxfp8_e4m3")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    batch = lm_input_arrays(0, cfg, 8, 64)
+
+    # single-device reference
+    loss_ref, _ = jax.jit(lambda p, b: lm_loss(p, b, cfg, qcfg))(params, batch)
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    psh = shardings_like(param_pspecs(params), mesh)
+    bsh = shardings_like(batch_pspecs(batch, mesh), mesh)
+    params_s = jax.device_put(params, psh)
+    batch_s = jax.device_put(batch, bsh)
+    with mesh, activation_sharding(mesh):
+        loss_sh, _ = jax.jit(lambda p, b: lm_loss(p, b, cfg, qcfg),
+                             in_shardings=(psh, bsh))(params_s, batch_s)
+        g = jax.jit(jax.grad(lambda p, b: lm_loss(p, b, cfg, qcfg)[0]),
+                    in_shardings=(psh, bsh))(params_s, batch_s)
+    gn = float(jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32)**2)
+                            for x in jax.tree.leaves(g))))
+    print(json.dumps({"ref": float(loss_ref), "sharded": float(loss_sh),
+                      "gnorm": gn}))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_loss_matches_single_device():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", _EQUIV_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert abs(res["ref"] - res["sharded"]) / abs(res["ref"]) < 5e-2, res
+    assert res["gnorm"] > 0
+
+
+_COMPRESS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, json
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+    from repro.core import E4M3
+    from repro.parallel import compressed_psum
+
+    mesh = jax.make_mesh((4,), ("pod",))
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 64))
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"))
+    def f(xs):
+        return compressed_psum({"g": xs[0]}, "pod", E4M3)["g"][None]
+
+    y = f(x)
+    exact = jnp.sum(x, 0)
+    rel = float(jnp.linalg.norm(y[0] - exact) / jnp.linalg.norm(exact))
+    print(json.dumps({"rel": rel}))
+""")
+
+
+@pytest.mark.slow
+def test_compressed_psum_close_to_exact():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", _COMPRESS_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["rel"] < 0.05, res
+
+
+def test_hlo_analyzer_counts_scan_trips():
+    """The analyzer must multiply while-body dot FLOPs by trip count."""
+    from repro.launch.hlo_analysis import analyze_hlo
+    L, B, D = 6, 32, 128
+
+    def body(h, w):
+        return jnp.tanh(h @ w), None
+
+    def f(ws, x):
+        h, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(h)
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, D), jnp.float32)).compile()
+    res = analyze_hlo(comp.as_text())
+    want = 2 * B * D * D * L
+    assert abs(res["dot_flops"] - want) / want < 0.05, res

@@ -1,0 +1,66 @@
+"""MoE dispatch correctness: gather-only dispatch vs dense per-token ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QuantConfig
+from repro.models.moe import moe_apply, moe_init
+
+
+def _dense_ref(p, x, k, act="swiglu"):
+    logits = x @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / gates.sum(-1, keepdims=True)
+    T, D = x.shape
+    y = jnp.zeros((T, D))
+    for t in range(T):
+        acc = jnp.zeros((D,))
+        for j in range(k):
+            e = int(idx[t, j])
+            up = x[t] @ p["w_up"][e]
+            if "w_gate" in p:
+                hh = jax.nn.silu(x[t] @ p["w_gate"][e]) * up
+            else:
+                hh = jax.nn.gelu(up)
+            acc = acc + gates[t, j] * (hh @ p["w_down"][e])
+        y = y.at[t].set(acc)
+    return y
+
+
+@pytest.mark.parametrize("k,act", [(2, "swiglu"), (1, "gelu"), (3, "swiglu")])
+def test_moe_matches_dense_reference(k, act):
+    T, D, F, E = 48, 32, 40, 8
+    p = moe_init(jax.random.PRNGKey(0), D, F, E, act=act)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, D))
+    y, m = moe_apply(p, x, QuantConfig.bf16(), top_k=k, act=act,
+                     capacity_factor=8.0)   # high capacity: no drops
+    y_ref = _dense_ref(p, x, k, act)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    assert float(m["dropped_frac"]) == 0.0
+
+
+def test_moe_capacity_drops_tokens():
+    T, D, F, E = 64, 16, 24, 4
+    p = moe_init(jax.random.PRNGKey(0), D, F, E)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, D))
+    y, m = moe_apply(p, x, QuantConfig.bf16(), top_k=2,
+                     capacity_factor=0.5)
+    assert float(m["dropped_frac"]) > 0.0
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_moe_grads_flow_to_router_and_experts():
+    T, D, F, E = 32, 16, 24, 4
+    p = moe_init(jax.random.PRNGKey(0), D, F, E)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, D))
+
+    def loss(p):
+        y, m = moe_apply(p, x, QuantConfig.bf16(), top_k=2)
+        return jnp.sum(y ** 2) + 0.01 * m["aux_loss"]
+
+    g = jax.grad(loss)(p)
+    for name in ("router", "w_up", "w_down"):
+        assert float(jnp.abs(g[name]).max()) > 0, name

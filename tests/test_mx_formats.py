@@ -1,0 +1,201 @@
+"""MX numerics: exact code tables (paper Fig. 5-left), Eq. 10 overflow
+criterion, Algorithm-1 semantics, and hypothesis property tests."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (E2M1, E2M3, E3M2, E4M3, E5M2, QuantConfig, mx_stats,
+                        positive_codes, preset, quantize_elem, quantize_mx)
+from repro.core.formats import exp2_int, floor_log2
+
+ALL_FMTS = [E4M3, E5M2, E2M3, E3M2, E2M1]
+
+
+# ---------------------------------------------------------------------------
+# Exact format tables (paper §6.1 / Fig. 5-left)
+# ---------------------------------------------------------------------------
+def test_e4m3_code_table_matches_paper():
+    codes = positive_codes(E4M3)
+    # "index 0 (the smallest sub-normal, 2^-9) up to index 125 (448)"
+    assert len(codes) == 126
+    assert codes[0] == 2.0 ** -9
+    assert codes[-1] == 448.0
+    # "for a fixed exponent bin the relative gap starts at 12.5% and decays
+    #  to 6.6%"
+    gaps = (codes[1:] - codes[:-1]) / codes[:-1]
+    bin_gaps = gaps[(codes[:-1] >= 1.0) & (codes[:-1] < 2.0)]
+    assert math.isclose(bin_gaps[0], 0.125)
+    assert math.isclose(bin_gaps[-1], 1 / 15, rel_tol=1e-9)  # 6.67%
+    assert E4M3.e_max == 8
+
+
+@pytest.mark.parametrize("fmt,maxn,e_max", [
+    (E5M2, 57344.0, 15), (E3M2, 28.0, 4), (E2M3, 7.5, 2), (E2M1, 6.0, 2)])
+def test_format_ranges(fmt, maxn, e_max):
+    codes = positive_codes(fmt)
+    assert codes[-1] == maxn
+    assert fmt.e_max == e_max
+
+
+def test_eq10_overflow_threshold():
+    """E4M3: values overflow iff |v| > 1.75 * 2^floor(log2 blockmax);
+    as blockmax -> 2^(k+1) this approaches 0.875 * blockmax (Eq. 10)."""
+    blockmax = 1.99
+    X = 2.0 ** (math.floor(math.log2(blockmax)) - E4M3.e_max)
+    v = np.linspace(0.5, blockmax, 20001)
+    overflow = v / X > 448.0
+    thresh = v[overflow][0] / blockmax
+    assert abs(thresh - 448.0 / 256.0 / blockmax) < 1e-3
+    assert 0.87 < thresh < 0.885   # the paper's 0.875 worst case
+
+
+def test_paper_ln_block_clamps_entirely():
+    """The paper's §6.1 example block of clustered LN weights collapses to
+    a single value (448 * 2^-9 = 0.875) under E4M3 block scaling."""
+    blk = jnp.array([0.89740956, 0.89628334, 0.88358812, 0.88474816,
+                     0.90372837] * 7, jnp.float32)[:32]
+    s = mx_stats(blk, E4M3)
+    assert float(s["last_bin_frac"]) == 1.0
+    assert float(s["tight_block_frac"]) == 1.0
+    y = np.unique(np.asarray(quantize_mx(blk, E4M3)))
+    assert y.tolist() == [0.875]
+
+
+def test_bump_scale_avoids_overflow_but_not_error():
+    """Paper Fig. 7: bumping the shared exponent does NOT mitigate — the
+    clustered block escapes the overflow region but re-rounds to the same
+    value at half the resolution (rel_err unchanged)."""
+    blk = jnp.array([0.89740956, 0.89628334, 0.88358812, 0.88474816,
+                     0.90372837] * 7, jnp.float32)[:32]
+    base = mx_stats(blk, E4M3)
+    bump = mx_stats(blk, E4M3, scale_mode="bump")
+    assert float(base["overflow_frac"]) == 1.0
+    assert float(bump["overflow_frac"]) == 0.0
+    # ...yet the quantization error does not improve (the paper's finding)
+    assert float(bump["rel_err"]) >= 0.9 * float(base["rel_err"])
+    # adaptive picks the better of the two — never worse than floor
+    adapt = mx_stats(blk, E4M3, scale_mode="adaptive")
+    assert float(adapt["rel_err"]) <= float(base["rel_err"]) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact helpers
+# ---------------------------------------------------------------------------
+def test_exp2_int_exact():
+    e = jnp.arange(-126, 128)
+    got = np.asarray(exp2_int(e), np.float64)
+    want = 2.0 ** np.arange(-126, 128, dtype=np.float64)
+    assert (got == want).all()
+
+
+def test_floor_log2_exact_at_powers():
+    x = jnp.asarray([2.0 ** k for k in range(-100, 100)], jnp.float32)
+    got = np.asarray(floor_log2(x))
+    assert (got == np.arange(-100, 100)).all()
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis)
+# ---------------------------------------------------------------------------
+@st.composite
+def arrays(draw, min_len=1, max_len=200):
+    n = draw(st.integers(min_len, max_len))
+    scale = draw(st.sampled_from([1e-6, 1e-3, 1.0, 1e3, 1e6]))
+    vals = draw(st.lists(
+        st.floats(-1.0, 1.0, allow_nan=False, width=32), min_size=n,
+        max_size=n))
+    return np.asarray(vals, np.float32) * scale
+
+
+@given(x=arrays(), fmt=st.sampled_from(ALL_FMTS))
+@settings(max_examples=50, deadline=None)
+def test_quantize_mx_idempotent(x, fmt):
+    y1 = quantize_mx(jnp.asarray(x), fmt, axis=0)
+    y2 = quantize_mx(y1, fmt, axis=0)
+    assert bool(jnp.all(y1 == y2))
+
+
+@given(x=arrays(), fmt=st.sampled_from(ALL_FMTS))
+@settings(max_examples=50, deadline=None)
+def test_quantize_mx_bounded_by_blockmax(x, fmt):
+    y = np.asarray(quantize_mx(jnp.asarray(x), fmt, axis=0))
+    # |quantized| <= max_normal * X <= 2 * blockmax; and sign preserved
+    assert (np.sign(y) * np.sign(x) >= 0).all()
+    m = np.abs(x).max() if len(x) else 0.0
+    if m > 0:
+        assert np.abs(y).max() <= 2.0 * m + 1e-30
+
+
+@given(x=arrays(min_len=32, max_len=64), fmt=st.sampled_from(ALL_FMTS))
+@settings(max_examples=50, deadline=None)
+def test_quantize_relative_error_bound(x, fmt):
+    """Values that stay in the element format's NORMAL range after scale
+    division have relative error <= 2^-mbits; below that (subnormal
+    region) the error is absolute: bounded by half the subnormal quantum
+    scaled back by X."""
+    xa = jnp.asarray(x)
+    y = np.asarray(quantize_mx(xa, fmt, axis=0))
+    err = np.abs(y - x)
+    rel = err / np.maximum(np.abs(x), 1e-30)
+    m = np.abs(x).max()
+    if m == 0:
+        return
+    # conservative normal-range cutoff: |x| >= blockmax * 2^(emin - emax)
+    sub = np.abs(x) < m * 2.0 ** (fmt.min_normal_exp - fmt.e_max)
+    assert (rel[~sub] <= 2.0 ** -fmt.mbits + 1e-6).all()
+    # subnormal region: absolute error bounded by the subnormal quantum
+    # times the (largest possible) scale 2^(floor(log2 m) - e_max)
+    X_hi = 2.0 ** (np.floor(np.log2(m)) - fmt.e_max)
+    assert (err[sub] <= 0.5 * fmt.min_subnormal * X_hi * (1 + 1e-6)).all()
+
+
+@given(fmt=st.sampled_from(ALL_FMTS))
+@settings(max_examples=10, deadline=None)
+def test_zeros_quantize_to_zeros(fmt):
+    y = quantize_mx(jnp.zeros(64), fmt, axis=0)
+    assert bool(jnp.all(y == 0))
+
+
+@given(x=arrays(min_len=2), fmt=st.sampled_from(ALL_FMTS))
+@settings(max_examples=50, deadline=None)
+def test_quantize_elem_on_grid(x, fmt):
+    """quantize_elem lands exactly on the code table (after clamping)."""
+    r = jnp.asarray(x)
+    q = np.asarray(quantize_elem(r, fmt), np.float64)
+    codes = positive_codes(fmt)
+    grid = set(codes.tolist()) | set((-codes).tolist()) | {0.0}
+    assert all(v in grid for v in q.tolist())
+
+
+@given(x=arrays(min_len=33, max_len=100))
+@settings(max_examples=30, deadline=None)
+def test_block_locality(x):
+    """Changing values in one block never changes another block's output."""
+    xa = jnp.asarray(x)
+    y0 = np.asarray(quantize_mx(xa, E4M3, axis=0))
+    xb = np.array(x)
+    xb[:32] = 7.777  # perturb only block 0
+    y1 = np.asarray(quantize_mx(jnp.asarray(xb), E4M3, axis=0))
+    assert (y0[32:] == y1[32:]).all()
+
+
+# ---------------------------------------------------------------------------
+# QuantConfig plumbing
+# ---------------------------------------------------------------------------
+def test_presets_and_interventions():
+    base = preset("mxfp8_e4m3")
+    assert base.quantize_bwd and base.ln_fmt is E4M3
+    fo = preset("e4m3_fwd_only")
+    assert not fo.quantize_bwd and fo.w_fwd is E4M3
+    wo = preset("e4m3_bf16act")
+    assert wo.w_fwd is E4M3 and wo.a_fwd is None and wo.ln_fmt is None
+    from repro.core import apply_intervention
+    assert apply_intervention(base, "skip_ln_quant").ln_fmt is None
+    assert not apply_intervention(base, "no_bwd_quant").quantize_bwd
+    assert apply_intervention(base, "fp32").is_noop
+    assert apply_intervention(base, "bump_exponent").scale_mode == "bump"
+    assert hash(base) != hash(fo)  # usable as static jit args

@@ -1,0 +1,108 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's pipeline in miniature: train the proxy in MX vs FP32 with
+identical seeds/batches (§4.1 protocol), observe quantization-induced
+gradient bias (§5), the LN-affine clamp mechanism (§6.1), and recover a
+stable run via a mitigation recipe (§6.2/§7).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (E4M3, QuantConfig, mx_stats, preset, zeta_bound)
+from repro.models import (ProxyConfig, proxy_batch, proxy_init, proxy_loss,
+                          teacher_init)
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def _train(cfg, qcfg, steps=40, lr=1e-3, seed=0):
+    teacher = teacher_init(jax.random.PRNGKey(1), cfg)
+    params = proxy_init(jax.random.PRNGKey(seed), cfg)
+    opt_cfg = AdamWConfig(weight_decay=0.0, grad_clip=0.0)
+    state = adamw_init(params, opt_cfg)
+    grad_fn = jax.jit(jax.value_and_grad(
+        lambda p, b, q: proxy_loss(p, b, cfg, q)[0]), static_argnums=(2,))
+    losses = []
+    for step in range(steps):
+        batch = proxy_batch(step, teacher, cfg)
+        loss, grads = grad_fn(params, batch, qcfg)
+        params, state, _ = adamw_update(grads, state, params, lr, opt_cfg)
+        losses.append(float(loss))
+    return losses, params, teacher
+
+
+CFG = ProxyConfig(d_model=64, n_layers=3, batch_size=128)
+
+
+def test_proxy_learns_in_all_precisions():
+    for prec in ("bf16", "mxfp8_e4m3", "e4m3_bf16act"):
+        losses, _, _ = _train(CFG, preset(prec))
+        assert losses[-1] < losses[0] * 0.9, (prec, losses[:3], losses[-3:])
+
+
+def test_identical_seeds_isolate_precision_effect():
+    """Same init/data: fp32-vs-fp32 reruns are bit-identical; fp32-vs-MX
+    differ only through quantization (paper §4.1 controlled protocol)."""
+    l1, _, _ = _train(CFG, QuantConfig.bf16().to_fp32(), steps=10)
+    l2, _, _ = _train(CFG, QuantConfig.bf16().to_fp32(), steps=10)
+    assert l1 == l2
+    l3, _, _ = _train(CFG, preset("mxfp8_e4m3"), steps=10)
+    assert l1 != l3
+    np.testing.assert_allclose(l1, l3, rtol=0.3)  # same trajectory family
+
+
+def test_quantization_bias_grows_with_fewer_bits():
+    teacher = teacher_init(jax.random.PRNGKey(1), CFG)
+    params = proxy_init(jax.random.PRNGKey(0), CFG)
+    batch = proxy_batch(0, teacher, CFG)
+    g_exact = jax.grad(lambda p: proxy_loss(p, batch, CFG,
+                                            QuantConfig.bf16())[0])(params)
+    ratios = []
+    # ordered by mantissa width: E4M3 (3 bits) -> E3M2 (2) -> E2M1 (1);
+    # relative quantization error ~ 2^-mbits drives the bias
+    for prec in ("mxfp8_e4m3", "mxfp6_e3m2", "mxfp4_e2m1"):
+        g_q = jax.grad(lambda p: proxy_loss(p, batch, CFG,
+                                            preset(prec))[0])(params)
+        ratios.append(float(zeta_bound(g_exact, g_q)["norm_ratio"]))
+    assert ratios[0] < ratios[1] < ratios[2], ratios
+
+
+def test_mitigation_reduces_bias():
+    teacher = teacher_init(jax.random.PRNGKey(1), CFG)
+    params = proxy_init(jax.random.PRNGKey(0), CFG)
+    batch = proxy_batch(0, teacher, CFG)
+    g_exact = jax.grad(lambda p: proxy_loss(p, batch, CFG,
+                                            QuantConfig.bf16())[0])(params)
+
+    def ratio(qcfg):
+        g = jax.grad(lambda p: proxy_loss(p, batch, CFG, qcfg)[0])(params)
+        return float(zeta_bound(g_exact, g)["norm_ratio"])
+
+    full = ratio(preset("mxfp4_e2m1"))
+    weights_only = ratio(QuantConfig.weights_only("e2m1"))
+    assert weights_only < full
+
+
+def test_ln_scale_clustering_measured_after_training():
+    """Train the proxy; LN scales cluster tightly (the precondition of the
+    paper's Fig. 5 clamping) and the mx_stats machinery tracks them."""
+    losses, params, _ = _train(CFG, preset("mxfp8_e4m3"), steps=60,
+                               lr=2e-3)
+    scale = np.asarray(params["layers"][0]["ln"]["scale"])
+    assert scale.std() < 0.2
+    for layer in params["layers"]:
+        s = mx_stats(layer["ln"]["scale"], E4M3)
+        assert 0.0 <= float(s["last_bin_frac"]) <= 1.0
+
+
+def test_serve_generate_end_to_end():
+    from repro.configs import get_config
+    from repro.models import lm_init
+    from repro.serve import generate
+    cfg = get_config("qwen2-7b", "smoke")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    out = generate(params, prompt, cfg, preset("e4m3_bf16act"),
+                   max_new_tokens=4)
+    assert out.shape == (1, 4)
+    assert bool((out >= 0).all()) and bool((out < cfg.vocab).all())

@@ -1,0 +1,166 @@
+"""Training substrate: optimizer, checkpoint/restart, fault-tolerant loop
+with spike-triggered rollback + precision intervention."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import E4M3, QuantConfig, preset
+from repro.data.synthetic import lm_batch, lm_input_arrays
+from repro.models import lm_init, lm_loss
+from repro.optim import (AdamWConfig, adamw_init, adamw_update, global_norm,
+                         warmup_cosine)
+from repro.train import Trainer, TrainerConfig, latest_step, restore, save
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(s, 100, peak=2e-4, init=2e-5, end=2e-5))
+           for s in range(100)]
+    assert lrs[0] == pytest.approx(2e-5)
+    assert max(lrs) == pytest.approx(2e-4, rel=1e-2)
+    assert lrs[-1] < 3e-5
+    assert np.argmax(lrs) == 5  # warmup_frac=0.05
+
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(weight_decay=0.0, grad_clip=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params, cfg)
+    for _ in range(300):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state, _ = adamw_update(g, state, params, 0.05, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_master_weights_bf16_params():
+    cfg = AdamWConfig(master=True, weight_decay=0.0)
+    params = {"w": jnp.ones((4, 32), jnp.bfloat16)}
+    state = adamw_init(params, cfg)
+    assert state["master"]["w"].dtype == jnp.float32
+    g = {"w": jnp.full((4, 32), 1e-3, jnp.bfloat16)}
+    p2, s2, _ = adamw_update(g, state, params, 1e-4, cfg)
+    assert p2["w"].dtype == jnp.bfloat16
+    # master accumulates updates below bf16 resolution
+    assert float(jnp.abs(s2["master"]["w"] - 1.0).max()) > 0
+
+
+def test_mx_quantized_moments():
+    cfg = AdamWConfig(moment_fmt=E4M3, weight_decay=0.0)
+    params = {"w": jnp.ones((2, 64))}
+    state = adamw_init(params, cfg)
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (2, 64))}
+    _, s2, _ = adamw_update(g, state, params, 1e-3, cfg)
+    from repro.core import quantize_mx
+    np.testing.assert_array_equal(
+        np.asarray(s2["m"]["w"]),
+        np.asarray(quantize_mx(s2["m"]["w"], E4M3, axis=-1)))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16)}}
+    save(str(tmp_path), 7, tree, {"note": "x"})
+    out, meta, step = restore(str(tmp_path), tree)
+    assert step == 7 and meta["note"] == "x"
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(10))
+    assert latest_step(str(tmp_path)) == 7
+
+
+def test_data_stream_determinism_and_resume():
+    b1 = lm_batch(5, 512, 4, 16, seed=3)
+    b2 = lm_batch(5, 512, 4, 16, seed=3)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = lm_batch(6, 512, 4, 16, seed=3)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    # learnable structure: next token mostly predictable from current
+    t = np.asarray(lm_batch(0, 512, 64, 64, seed=0, noise=0.0)["tokens"])
+    d = (t[:, 1:] - t[:, :-1]) % 512
+    assert (d == d[:, :1]).mean() > 0.99
+
+
+def _tiny_trainer(tmp_path, auto_intervention="bf16_activations"):
+    cfg = get_config("olmo-paper", "smoke")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    tcfg = TrainerConfig(total_steps=30, ckpt_dir=str(tmp_path),
+                         ckpt_every=5, peak_lr=1e-3,
+                         auto_intervention=auto_intervention,
+                         spike_factor=3.0)
+    return Trainer(
+        loss_fn=lambda p, b, q: lm_loss(p, b, cfg, q),
+        params=params, qcfg=preset("mxfp8_e4m3"),
+        batch_fn=lambda s: lm_input_arrays(s, cfg, 4, 32),
+        tcfg=tcfg), cfg
+
+
+def test_trainer_runs_and_checkpoints(tmp_path):
+    trainer, _ = _tiny_trainer(tmp_path)
+    hist = trainer.run(12)
+    assert len(hist) == 12
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    trainer._ckptr.wait()
+    assert latest_step(str(tmp_path)) is not None
+
+
+def test_trainer_restore_resumes_exactly(tmp_path):
+    t1, cfg = _tiny_trainer(tmp_path)
+    t1.run(10)
+    t1.checkpoint()
+    t1._ckptr.wait()
+    losses_cont = [r["loss"] for r in t1.run(3)][-3:]
+    t2, _ = _tiny_trainer(tmp_path)
+    assert t2.restore(step=10)   # run(3) wrote a later checkpoint at 13
+    assert t2.step == 10
+    losses_resumed = [r["loss"] for r in t2.run(3)][-3:]
+    np.testing.assert_allclose(losses_cont, losses_resumed, rtol=1e-5)
+
+
+def test_spike_triggers_rollback_and_intervention(tmp_path):
+    """Inject a loss spike via a poisoned batch; the trainer must roll back
+    to the last checkpoint and switch the precision config (paper Fig. 7
+    operationalized)."""
+    cfg = get_config("olmo-paper", "smoke")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+
+    def batch_fn(step):
+        b = lm_input_arrays(step, cfg, 4, 32)
+        return b
+
+    poisoned = {"done": False}
+
+    def loss_fn(p, b, q):
+        loss, m = lm_loss(p, b, cfg, q)
+        return loss, m
+
+    tcfg = TrainerConfig(total_steps=40, ckpt_dir=str(tmp_path),
+                         ckpt_every=5, spike_factor=5.0,
+                         auto_intervention="bf16_activations")
+    tr = Trainer(loss_fn, params, preset("mxfp8_e4m3"), batch_fn, tcfg=tcfg)
+    tr.run(8)          # build history + checkpoints
+    # inject: report a huge loss to the detector directly
+    spiked = tr.detector.update(1e9, None)
+    assert spiked
+    tr._recover("test-injected")
+    assert tr.events and tr.events[-1]["event"] == "recovery"
+    assert tr.qcfg.a_fwd is None            # bf16_activations applied
+    assert tr.step <= 8                     # rolled back
+    hist = tr.run(3)                        # training continues
+    assert all(np.isfinite(h["loss"]) for h in hist)
+
+
+def test_grad_bias_probe_on_lm():
+    from repro.core import grad_bias_probe
+    cfg = get_config("olmo-paper", "smoke")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    batch = lm_input_arrays(0, cfg, 2, 32)
+
+    def grad_fn(p, b, q):
+        return jax.grad(lambda pp: lm_loss(pp, b, cfg, q)[0])(p)
+
+    out = grad_bias_probe(grad_fn, params, batch, preset("mxfp8_e4m3"))
+    assert 0 < float(out["norm_ratio"]) < 1.0
+    assert float(out["cosine"]) > 0.9
