@@ -5,6 +5,11 @@ the derived metric that matters is exactness (max |kernel − ref|) and the
 modeled HBM-bytes saving of quantize-on-load (8-bit elements + E8M0
 scale = 8.25 effective bits vs 16 for bf16 → 1.94x read-bandwidth win on
 the GEMM operand streams, which the roofline analysis applies).
+
+Reports all three GEMMs of a quantized training step side by side —
+forward (blocks along K), dgrad (blocks along N), wgrad (blocks along T) —
+at matched (T, K, N), i.e. one fused step of a (T, K) activation through a
+(K, N) layer in the paper's per-pass formats.
 """
 from __future__ import annotations
 
@@ -13,9 +18,35 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import E4M3, E5M2
-from repro.kernels import (mx_matmul, mx_matmul_ref, mx_quantize,
-                           mx_quantize_ref)
+from repro.kernels import (mx_matmul, mx_matmul_dgrad, mx_matmul_dgrad_ref,
+                           mx_matmul_ref, mx_matmul_wgrad,
+                           mx_matmul_wgrad_ref, mx_quantize, mx_quantize_ref)
 from .common import Row, time_fn
+
+
+def _gemm_rows(t: int, k: int, n: int) -> list:
+    """fwd/dgrad/wgrad throughput + exactness at one (T, K, N)."""
+    kx = jax.random.PRNGKey(1)
+    x = jax.random.normal(kx, (t, k))                 # activations
+    w = jax.random.normal(jax.random.PRNGKey(2), (k, n))   # weights
+    dy = jax.random.normal(jax.random.PRNGKey(3), (t, n))  # upstream grads
+    passes = {
+        # mx_mix formats: E4M3 forward, E5M2 gradients (paper §4.2).
+        "fwd": (mx_matmul, mx_matmul_ref, (x, w, E4M3, E4M3)),
+        "dgrad": (mx_matmul_dgrad, mx_matmul_dgrad_ref, (dy, w, E5M2, E4M3)),
+        "wgrad": (mx_matmul_wgrad, mx_matmul_wgrad_ref, (x, dy, E4M3, E5M2)),
+    }
+    flops = 2.0 * t * k * n
+    rows = []
+    for name, (fn, ref_fn, args) in passes.items():
+        us_k = time_fn(lambda: fn(*args), iters=3)
+        us_r = time_fn(lambda: ref_fn(*args), iters=3)
+        y_k, y_r = fn(*args), ref_fn(*args)
+        rel = float(jnp.abs(y_k - y_r).max() / jnp.abs(y_r).max())
+        rows.append(Row(f"kernel.{name}.{t}x{k}x{n}", us_k,
+                        f"ref_us={us_r:.1f} rel_err={rel:.2e} "
+                        f"gflops_per_call={flops / 1e9:.2f}"))
+    return rows
 
 
 def run(budget: str = "quick"):
@@ -31,16 +62,8 @@ def run(budget: str = "quick"):
         rows.append(Row(f"kernel.quant.{m}x{k}", us_k,
                         f"ref_us={us_r:.1f} max_err={err} "
                         f"modeled_hbm_saving=1.94x"))
-    mm = [(128, 256, 128)] if budget == "quick" else [(128, 256, 128),
-                                                      (512, 512, 512)]
-    for (m, k, n) in mm:
-        a = jax.random.normal(jax.random.PRNGKey(1), (m, k))
-        b = jax.random.normal(jax.random.PRNGKey(2), (k, n))
-        us_k = time_fn(lambda: mx_matmul(a, b, E4M3, E4M3), iters=3)
-        us_r = time_fn(lambda: mx_matmul_ref(a, b, E4M3, E4M3), iters=3)
-        rel = float(jnp.abs(mx_matmul(a, b, E4M3, E4M3)
-                            - mx_matmul_ref(a, b, E4M3, E4M3)).max()
-                    / jnp.abs(mx_matmul_ref(a, b, E4M3, E4M3)).max())
-        rows.append(Row(f"kernel.matmul.{m}x{k}x{n}", us_k,
-                        f"ref_us={us_r:.1f} rel_err={rel:.2e}"))
+    tkn = [(128, 256, 128)] if budget == "quick" else [(128, 256, 128),
+                                                       (512, 512, 512)]
+    for (t, k, n) in tkn:
+        rows.extend(_gemm_rows(t, k, n))
     return rows

@@ -40,8 +40,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", default="quick", choices=["quick", "full"])
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="import/registration check only: verify every "
+                         "benchmark module exposes run() and exit (CI)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; know {sorted(BENCHES)}")
+    if args.smoke:
+        bad = [n for n in names if not callable(getattr(BENCHES[n], "run",
+                                                        None))]
+        print(f"# smoke: {len(names)} benchmark modules importable, "
+              f"{len(bad)} missing run()")
+        sys.exit(1 if bad else 0)
     print("name,us_per_call,derived")
     failures = 0
     for name in names:

@@ -1,0 +1,6 @@
+"""Reproduction of "Characterization and Mitigation of Training
+Instabilities in Microscaling Formats" on the JAX/Pallas TPU stack.
+
+Subpackages: core (MX numerics + quantized GEMMs), kernels (Pallas TPU),
+models, train, optim, data, configs, parallel, serve, launch.
+"""

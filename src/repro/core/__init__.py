@@ -5,7 +5,8 @@ from .formats import (BF16, E2M1, E2M3, E3M2, E4M3, E5M2, FORMATS,
 from .mx import MX_BLOCK, mx_stats, quantize_mx
 from .qconfig import (INTERVENTIONS, PRESETS, QuantConfig, apply_intervention,
                       preset)
-from .qlinear import qdot_attn, qeinsum_bmm, qmatmul
+from .qlinear import (fused_gemms_enabled, qdot_attn, qeinsum_bmm, qmatmul,
+                      use_fused_gemms)
 from .diagnostics import (GradBiasStats, SpikeDetector, grad_bias_probe,
                           ln_clamp_stats, zeta_bound)
 
@@ -14,7 +15,8 @@ __all__ = [
     "ElementFormat", "get_format", "positive_codes", "quantize_elem",
     "MX_BLOCK", "mx_stats", "quantize_mx",
     "INTERVENTIONS", "PRESETS", "QuantConfig", "apply_intervention", "preset",
-    "qdot_attn", "qeinsum_bmm", "qmatmul",
+    "qdot_attn", "qeinsum_bmm", "qmatmul", "fused_gemms_enabled",
+    "use_fused_gemms",
     "GradBiasStats", "SpikeDetector", "grad_bias_probe", "ln_clamp_stats",
     "zeta_bound",
 ]

@@ -115,8 +115,14 @@ def quantize_mx(x: jax.Array, fmt: Optional[ElementFormat], axis: int = -1,
     scale = exp2_int(e)
     q = quantize_elem(xb / scale, fmt)
     yb = q * scale
-    y = block_unreshape(yb, axis, n).astype(orig_dtype)
-    return x + jax.lax.stop_gradient(y - x)
+    y = block_unreshape(yb, axis, n)
+    # Straight-through estimator, assembled in fp32: xf + (y - xf) == y
+    # exactly, so the forward value sits exactly on the MX grid even for
+    # bf16 containers (computing the STE in bf16 double-rounds, drifting
+    # 1 ulp off-grid and off the fused kernels' values); every MX element
+    # times a power-of-two scale is bf16-representable, so the final cast
+    # is exact too.
+    return (xf + jax.lax.stop_gradient(y - xf)).astype(orig_dtype)
 
 
 @partial(jax.jit, static_argnames=("fmt", "axis", "block", "scale_mode"))

@@ -14,10 +14,28 @@ shared scales factor out of every dot product (App. A).  Residuals keep the
 un-quantized bf16 tensors, so "forward-only" quantization degrades to the
 straight-through estimator the paper's mitigation (2) uses.
 
+All three GEMMs dispatch to the fused Pallas kernels in `repro.kernels`
+(quantize-on-load after the HBM→VMEM copy, fp32 VMEM accumulators) whenever
+the config is kernel-eligible: ``scale_mode == "floor"`` (the only mode the
+hardware-shaped kernels implement) and at least one operand of the GEMM is
+quantized.  Unquantized GEMMs stay on XLA's native matmul, and the "bump" /
+"adaptive" scale modes use the emulation path in `repro.core.mx`.
+
+Dispatch policy (`fused_gemms_enabled`): fused kernels are on by default on
+TPU and off elsewhere — off-TPU the kernels would run under the Pallas
+interpreter, which is a correctness device, not a performance path, and the
+emulation path is validated bit-identical to the kernels by
+tests/test_kernels.py.  Override with the ``REPRO_FUSED_GEMM`` env var
+("1"/"0") or the `use_fused_gemms` context manager (tests and CI force the
+interpreter path this way).  The decision is made at trace time: re-jit
+(or use a fresh function) after toggling.
+
 Accumulation is fp32 (`preferred_element_type`), matching MXU semantics.
 """
 from __future__ import annotations
 
+import contextlib
+import os
 from functools import partial
 from typing import Optional
 
@@ -27,7 +45,45 @@ import jax.numpy as jnp
 from .mx import quantize_mx
 from .qconfig import QuantConfig
 
-__all__ = ["qmatmul", "qeinsum_bmm", "qdot_attn"]
+__all__ = ["qmatmul", "qeinsum_bmm", "qdot_attn", "fused_gemms_enabled",
+           "use_fused_gemms"]
+
+_FUSED_OVERRIDE: Optional[bool] = None
+
+
+def fused_gemms_enabled() -> bool:
+    """Whether qmatmul dispatches to the fused Pallas kernels (trace-time)."""
+    if _FUSED_OVERRIDE is not None:
+        return _FUSED_OVERRIDE
+    env = os.environ.get("REPRO_FUSED_GEMM", "auto").lower()
+    if env in ("1", "on", "true"):
+        return True
+    if env in ("0", "off", "false"):
+        return False
+    return jax.default_backend() == "tpu"
+
+
+@contextlib.contextmanager
+def use_fused_gemms(enable: bool):
+    """Force fused-kernel dispatch on/off (interpret mode when off-TPU)."""
+    global _FUSED_OVERRIDE
+    prev = _FUSED_OVERRIDE
+    _FUSED_OVERRIDE = bool(enable)
+    try:
+        yield
+    finally:
+        _FUSED_OVERRIDE = prev
+
+
+def _kernels():
+    # Imported lazily: repro.kernels itself imports repro.core submodules.
+    from repro import kernels
+    return kernels
+
+
+def _fused(cfg: QuantConfig, *fmts) -> bool:
+    return (fused_gemms_enabled() and cfg.scale_mode == "floor"
+            and any(f is not None for f in fmts))
 
 
 def _mm(a: jax.Array, b: jax.Array, out_dtype) -> jax.Array:
@@ -42,11 +98,15 @@ def qmatmul(x: jax.Array, w: jax.Array, cfg: QuantConfig) -> jax.Array:
 
 
 def _qmatmul_fwd(x, w, cfg: QuantConfig):
-    xq = quantize_mx(x, cfg.a_fwd, axis=-1, block=cfg.block,
-                     scale_mode=cfg.scale_mode)
-    wq = quantize_mx(w, cfg.w_fwd, axis=0, block=cfg.block,
-                     scale_mode=cfg.scale_mode)
-    y = _mm(xq, wq, x.dtype)
+    if _fused(cfg, cfg.a_fwd, cfg.w_fwd):
+        y = _kernels().mx_matmul(x, w, cfg.a_fwd, cfg.w_fwd,
+                                 block=cfg.block).astype(x.dtype)
+    else:
+        xq = quantize_mx(x, cfg.a_fwd, axis=-1, block=cfg.block,
+                         scale_mode=cfg.scale_mode)
+        wq = quantize_mx(w, cfg.w_fwd, axis=0, block=cfg.block,
+                         scale_mode=cfg.scale_mode)
+        y = _mm(xq, wq, x.dtype)
     return y, (x, w)
 
 
@@ -56,18 +116,26 @@ def _qmatmul_bwd(cfg: QuantConfig, res, dy):
     dyf = dy.reshape(-1, ndim)
     xf = x.reshape(-1, kdim)
     if cfg.quantize_bwd:
-        # dgrad: contraction over N.
-        dyq = quantize_mx(dy, cfg.g_bwd, axis=-1, block=cfg.block,
-                          scale_mode=cfg.scale_mode)
-        wq = quantize_mx(w, cfg.w_bwd, axis=1, block=cfg.block,
-                         scale_mode=cfg.scale_mode)
-        dx = _mm(dyq, wq.T, x.dtype)
-        # wgrad: contraction over tokens.
-        xq = quantize_mx(xf, cfg.a_bwd, axis=0, block=cfg.block,
-                         scale_mode=cfg.scale_mode)
-        dyq2 = quantize_mx(dyf, cfg.g_bwd, axis=0, block=cfg.block,
-                           scale_mode=cfg.scale_mode)
-        dw = _mm(xq.T, dyq2, w.dtype)
+        # dgrad: contraction (and MX blocks) over N.
+        if _fused(cfg, cfg.g_bwd, cfg.w_bwd):
+            dx = _kernels().mx_matmul_dgrad(dy, w, cfg.g_bwd, cfg.w_bwd,
+                                            block=cfg.block).astype(x.dtype)
+        else:
+            dyq = quantize_mx(dy, cfg.g_bwd, axis=-1, block=cfg.block,
+                              scale_mode=cfg.scale_mode)
+            wq = quantize_mx(w, cfg.w_bwd, axis=1, block=cfg.block,
+                             scale_mode=cfg.scale_mode)
+            dx = _mm(dyq, wq.T, x.dtype)
+        # wgrad: contraction (and MX blocks) over tokens.
+        if _fused(cfg, cfg.a_bwd, cfg.g_bwd):
+            dw = _kernels().mx_matmul_wgrad(xf, dyf, cfg.a_bwd, cfg.g_bwd,
+                                            block=cfg.block).astype(w.dtype)
+        else:
+            xq = quantize_mx(xf, cfg.a_bwd, axis=0, block=cfg.block,
+                             scale_mode=cfg.scale_mode)
+            dyq2 = quantize_mx(dyf, cfg.g_bwd, axis=0, block=cfg.block,
+                               scale_mode=cfg.scale_mode)
+            dw = _mm(xq.T, dyq2, w.dtype)
     else:
         dx = _mm(dy, w.T, x.dtype)
         dw = _mm(xf.T, dyf, w.dtype)

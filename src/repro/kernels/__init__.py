@@ -1,11 +1,28 @@
 """Pallas TPU kernels for the MX quantization hot-spots.
 
-  mx_quant.py  — fused block-scale quantize-dequantize (VPU, VMEM-tiled)
-  mx_matmul.py — MX GEMM with quantize-on-load and fp32 accumulation (MXU)
-  ops.py       — jit'd wrappers (rank/axis handling, interpret fallback)
-  ref.py       — pure-jnp oracles (delegate to the validated numerics core)
-"""
-from .ops import mx_matmul, mx_quantize
-from .ref import mx_matmul_ref, mx_quantize_ref
+  mx_quant.py      — fused block-scale quantize-dequantize (VPU, VMEM-tiled)
+  mx_matmul.py     — forward MX GEMM, quantize-on-load, fp32 accum (MXU)
+  mx_matmul_bwd.py — backward MX GEMMs: dgrad + wgrad, quantize-on-load
+  ops.py           — jit'd wrappers (rank/axis handling, interpret fallback)
+  ref.py           — pure-jnp oracles (delegate to the validated numerics core)
 
-__all__ = ["mx_matmul", "mx_quantize", "mx_matmul_ref", "mx_quantize_ref"]
+All three GEMMs of a quantized training step, with each operand MX-blocked
+along that GEMM's own contraction axis (paper App. A / qconfig.py):
+
+      forward  : y  = Q[a_fwd](x) @ Q[w_fwd](W)       blocks along K
+      dgrad    : dx = Q[g_bwd](dy) @ Q[w_bwd](W)^T    blocks along N
+      wgrad    : dW = Q[a_bwd](x)^T @ Q[g_bwd](dy)    blocks along T
+
+`repro.core.qlinear.qmatmul` dispatches here (custom VJP), so models and
+the training loop run fully fused quantized steps on TPU; off-TPU the same
+kernels run under the Pallas interpreter for tests and CI.
+"""
+from .ops import mx_matmul, mx_matmul_dgrad, mx_matmul_wgrad, mx_quantize
+from .ref import (mx_matmul_dgrad_ref, mx_matmul_ref, mx_matmul_wgrad_ref,
+                  mx_quantize_ref)
+
+__all__ = [
+    "mx_matmul", "mx_matmul_dgrad", "mx_matmul_wgrad", "mx_quantize",
+    "mx_matmul_ref", "mx_matmul_dgrad_ref", "mx_matmul_wgrad_ref",
+    "mx_quantize_ref",
+]

@@ -11,6 +11,14 @@ whole operands up front (ref.py oracle).
 
 Tiles default to MXU-aligned (multiples of 128); the fp32 accumulator lives
 in a VMEM scratch buffer across the K grid dimension.
+
+This is the *forward* GEMM of the quantized training step (blocks along
+K); the dgrad (blocks along N) and wgrad (blocks along T) siblings live in
+mx_matmul_bwd.py:
+
+      forward  : y  = Q[a_fwd](x) @ Q[w_fwd](W)       blocks along K
+      dgrad    : dx = Q[g_bwd](dy) @ Q[w_bwd](W)^T    blocks along N
+      wgrad    : dW = Q[a_bwd](x)^T @ Q[g_bwd](dy)    blocks along T
 """
 from __future__ import annotations
 

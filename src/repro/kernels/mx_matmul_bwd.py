@@ -1,0 +1,179 @@
+"""Pallas TPU kernels: MX-quantized backward GEMMs (dgrad / wgrad).
+
+The backward half of the quantized training step (see qconfig.py):
+
+      forward  : y  = Q[a_fwd](x) @ Q[w_fwd](W)       blocks along K
+      dgrad    : dx = Q[g_bwd](dy) @ Q[w_bwd](W)^T    blocks along N
+      wgrad    : dW = Q[a_bwd](x)^T @ Q[g_bwd](dy)    blocks along T (tokens)
+
+Each GEMM quantizes its operands along *its own* contraction axis so the
+per-block shared scales factor out of every dot product (paper App. A).
+Concretely, with x:(T,K), W:(K,N), dy:(T,N):
+
+      dgrad   dx[t,k] = sum_n  Q(dy)[t,n] * Q(W)[k,n]     n is the MX axis
+      wgrad   dW[k,n] = sum_t  Q(x)[t,k]  * Q(dy)[t,n]    t is the MX axis
+
+Like the forward kernel (mx_matmul.py), both use quantize-on-load: tiles
+are quantized *after* the HBM->VMEM copy and fed straight to the MXU in
+dequantized form with an fp32 VMEM accumulator across the contraction grid
+dimension — W is read in its natural (K, N) layout for dgrad (the
+transpose happens in-register on the tile), and neither x nor dy is ever
+re-materialized in HBM in quantized or transposed form.  This is the
+fused-backward recipe of NVIDIA's MXFP8 pre-training report
+(arXiv:2506.08027) mapped onto TPU memory spaces.
+
+Contraction tiles are multiples of the MX block (32), so tile-local block
+scales equal whole-operand block scales and the fused result matches the
+ref.py oracles exactly (bit-identical when the contraction fits one tile;
+fp32-accumulation-order differences only beyond that).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import ElementFormat
+from repro.core.mx import MX_BLOCK
+from .mx_quant import _quantize_block_tile
+
+__all__ = ["mx_matmul_dgrad_pallas", "mx_matmul_wgrad_pallas"]
+
+
+def _mx_dgrad_kernel(dy_ref, w_ref, o_ref, acc_ref, *,
+                     fmt_g: Optional[ElementFormat],
+                     fmt_w: Optional[ElementFormat], block: int,
+                     n_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dy = dy_ref[...].astype(jnp.float32)   # (TM, TN)
+    w = w_ref[...].astype(jnp.float32)     # (TK, TN)
+    if fmt_g is not None:
+        dy = _quantize_block_tile(dy, fmt_g, block)    # blocks along N
+    if fmt_w is not None:
+        w = _quantize_block_tile(w, fmt_w, block)      # blocks along N
+    # dx tile += dy @ w^T, contracting the shared N axis in-register.
+    acc_ref[...] += jax.lax.dot_general(
+        dy, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "fmt_g", "fmt_w", "block", "tile_m", "tile_k", "tile_n", "interpret"))
+def mx_matmul_dgrad_pallas(dy: jax.Array, w: jax.Array,
+                           fmt_g: Optional[ElementFormat],
+                           fmt_w: Optional[ElementFormat],
+                           block: int = MX_BLOCK, tile_m: int = 128,
+                           tile_k: int = 128, tile_n: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    """``dx (M,K) = dy (M,N) @ w (K,N)^T`` with MX blocks along N.
+
+    N (the dgrad contraction axis) must be a multiple of ``block``; M and K
+    are padded to tile multiples (zero rows/columns of the *output* only).
+    ``w`` is consumed in its natural forward (K, N) layout.
+    """
+    m, n = dy.shape
+    k, n2 = w.shape
+    assert n == n2, (dy.shape, w.shape)
+    if n % block:
+        raise ValueError(f"N={n} not a multiple of block={block}")
+    tile_m, tile_k = min(tile_m, m), min(tile_k, k)
+    tile_n = min(tile_n, n)
+    if tile_n % block:
+        raise ValueError(f"tile_n={tile_n} not a multiple of block={block}")
+    pm, pk, pn = (-m) % tile_m, (-k) % tile_k, (-n) % tile_n
+    dyp = jnp.pad(dy, ((0, pm), (0, pn))) if (pm or pn) else dy
+    wp = jnp.pad(w, ((0, pk), (0, pn))) if (pk or pn) else w
+    gm, gk, gn = (m + pm) // tile_m, (k + pk) // tile_k, (n + pn) // tile_n
+    out = pl.pallas_call(
+        functools.partial(_mx_dgrad_kernel, fmt_g=fmt_g, fmt_w=fmt_w,
+                          block=block, n_steps=gn),
+        grid=(gm, gk, gn),
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_n), lambda i, j, nn: (i, nn)),
+            pl.BlockSpec((tile_k, tile_n), lambda i, j, nn: (j, nn)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_k), lambda i, j, nn: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, k + pk), dy.dtype),
+        scratch_shapes=[pltpu.VMEM((tile_m, tile_k), jnp.float32)],
+        interpret=interpret,
+    )(dyp, wp)
+    return out[:m, :k]
+
+
+def _mx_wgrad_kernel(x_ref, dy_ref, o_ref, acc_ref, *,
+                     fmt_a: Optional[ElementFormat],
+                     fmt_g: Optional[ElementFormat], block: int,
+                     t_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)     # (TT, TK)
+    dy = dy_ref[...].astype(jnp.float32)   # (TT, TN)
+    # Blocks run along the token axis (axis 0 of both tiles); the tile
+    # transpose in/out of the row-blocked quantizer stays in VREGs.
+    if fmt_a is not None:
+        x = _quantize_block_tile(x.T, fmt_a, block).T
+    if fmt_g is not None:
+        dy = _quantize_block_tile(dy.T, fmt_g, block).T
+    # dW tile += x^T @ dy, contracting the shared token axis.
+    acc_ref[...] += jax.lax.dot_general(
+        x, dy, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == t_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "fmt_a", "fmt_g", "block", "tile_k", "tile_n", "tile_t", "interpret"))
+def mx_matmul_wgrad_pallas(x: jax.Array, dy: jax.Array,
+                           fmt_a: Optional[ElementFormat],
+                           fmt_g: Optional[ElementFormat],
+                           block: int = MX_BLOCK, tile_k: int = 128,
+                           tile_n: int = 128, tile_t: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    """``dW (K,N) = x (T,K)^T @ dy (T,N)`` with MX blocks along T (tokens).
+
+    T (the wgrad contraction axis) must be a multiple of ``block``; K and N
+    are padded to tile multiples.  Neither operand is transposed in HBM.
+    """
+    t, k = x.shape
+    t2, n = dy.shape
+    assert t == t2, (x.shape, dy.shape)
+    if t % block:
+        raise ValueError(f"T={t} not a multiple of block={block}")
+    tile_k, tile_n = min(tile_k, k), min(tile_n, n)
+    tile_t = min(tile_t, t)
+    if tile_t % block:
+        raise ValueError(f"tile_t={tile_t} not a multiple of block={block}")
+    pk, pn, pt = (-k) % tile_k, (-n) % tile_n, (-t) % tile_t
+    xp = jnp.pad(x, ((0, pt), (0, pk))) if (pt or pk) else x
+    dyp = jnp.pad(dy, ((0, pt), (0, pn))) if (pt or pn) else dy
+    gk, gn, gt = (k + pk) // tile_k, (n + pn) // tile_n, (t + pt) // tile_t
+    out = pl.pallas_call(
+        functools.partial(_mx_wgrad_kernel, fmt_a=fmt_a, fmt_g=fmt_g,
+                          block=block, t_steps=gt),
+        grid=(gk, gn, gt),
+        in_specs=[
+            pl.BlockSpec((tile_t, tile_k), lambda i, j, tt: (tt, i)),
+            pl.BlockSpec((tile_t, tile_n), lambda i, j, tt: (tt, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_k, tile_n), lambda i, j, tt: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k + pk, n + pn), x.dtype),
+        scratch_shapes=[pltpu.VMEM((tile_k, tile_n), jnp.float32)],
+        interpret=interpret,
+    )(xp, dyp)
+    return out[:k, :n]

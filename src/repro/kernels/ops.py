@@ -17,9 +17,10 @@ from repro.core.formats import ElementFormat
 from repro.core.mx import MX_BLOCK
 from . import ref
 from .mx_matmul import mx_matmul_pallas
+from .mx_matmul_bwd import mx_matmul_dgrad_pallas, mx_matmul_wgrad_pallas
 from .mx_quant import mx_quantize_pallas
 
-__all__ = ["mx_quantize", "mx_matmul"]
+__all__ = ["mx_quantize", "mx_matmul", "mx_matmul_dgrad", "mx_matmul_wgrad"]
 
 
 def _use_interpret() -> bool:
@@ -56,3 +57,40 @@ def mx_matmul(a: jax.Array, b: jax.Array,
     y2 = mx_matmul_pallas(a2, b, fmt_a, fmt_b, block=block,
                           interpret=_use_interpret())
     return y2.reshape(lead + (b.shape[-1],))
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_g", "fmt_w", "block"))
+def mx_matmul_dgrad(dy: jax.Array, w: jax.Array,
+                    fmt_g: Optional[ElementFormat],
+                    fmt_w: Optional[ElementFormat],
+                    block: int = MX_BLOCK) -> jax.Array:
+    """Kernel-backed dgrad ``dy (..., N) @ w (K, N)^T`` -> (..., K).
+
+    Both operands carry MX blocks along N (the dgrad contraction axis);
+    ``w`` stays in its forward (K, N) layout.  Falls back to the jnp oracle
+    when N is not a block multiple."""
+    if dy.shape[-1] % block:
+        return ref.mx_matmul_dgrad_ref(dy, w, fmt_g, fmt_w, block=block)
+    lead = dy.shape[:-1]
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    y2 = mx_matmul_dgrad_pallas(dy2, w, fmt_g, fmt_w, block=block,
+                                interpret=_use_interpret())
+    return y2.reshape(lead + (w.shape[0],))
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_a", "fmt_g", "block"))
+def mx_matmul_wgrad(x: jax.Array, dy: jax.Array,
+                    fmt_a: Optional[ElementFormat],
+                    fmt_g: Optional[ElementFormat],
+                    block: int = MX_BLOCK) -> jax.Array:
+    """Kernel-backed wgrad ``x (..., K)^T @ dy (..., N)`` -> (K, N).
+
+    Leading (batch/sequence) axes fold into one token axis; both operands
+    carry MX blocks along it (the wgrad contraction axis).  Falls back to
+    the jnp oracle when the folded token count is not a block multiple."""
+    x2 = x.reshape(-1, x.shape[-1])
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    if x2.shape[0] % block:
+        return ref.mx_matmul_wgrad_ref(x2, dy2, fmt_a, fmt_g, block=block)
+    return mx_matmul_wgrad_pallas(x2, dy2, fmt_a, fmt_g, block=block,
+                                  interpret=_use_interpret())

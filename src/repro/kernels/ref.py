@@ -14,7 +14,8 @@ import jax.numpy as jnp
 from repro.core.formats import ElementFormat
 from repro.core.mx import MX_BLOCK, quantize_mx
 
-__all__ = ["mx_quantize_ref", "mx_matmul_ref"]
+__all__ = ["mx_quantize_ref", "mx_matmul_ref", "mx_matmul_dgrad_ref",
+           "mx_matmul_wgrad_ref"]
 
 
 def mx_quantize_ref(x: jax.Array, fmt: ElementFormat, axis: int = -1,
@@ -34,3 +35,27 @@ def mx_matmul_ref(a: jax.Array, b: jax.Array,
     bq = quantize_mx(b, fmt_b, axis=0, block=block)
     return jnp.matmul(aq, bq, preferred_element_type=jnp.float32
                       ).astype(a.dtype)
+
+
+def mx_matmul_dgrad_ref(dy: jax.Array, w: jax.Array,
+                        fmt_g: Optional[ElementFormat],
+                        fmt_w: Optional[ElementFormat],
+                        block: int = MX_BLOCK) -> jax.Array:
+    """dgrad oracle: ``dx = Q(dy) @ Q(w)^T`` with MX blocks along N (the
+    dgrad contraction axis).  dy: (..., N); w: (K, N) in forward layout."""
+    dyq = quantize_mx(dy, fmt_g, axis=-1, block=block)
+    wq = quantize_mx(w, fmt_w, axis=1, block=block)
+    return jnp.matmul(dyq, wq.T, preferred_element_type=jnp.float32
+                      ).astype(dy.dtype)
+
+
+def mx_matmul_wgrad_ref(x: jax.Array, dy: jax.Array,
+                        fmt_a: Optional[ElementFormat],
+                        fmt_g: Optional[ElementFormat],
+                        block: int = MX_BLOCK) -> jax.Array:
+    """wgrad oracle: ``dW = Q(x)^T @ Q(dy)`` with MX blocks along T (the
+    token/contraction axis).  x: (T, K); dy: (T, N)."""
+    xq = quantize_mx(x, fmt_a, axis=0, block=block)
+    dyq = quantize_mx(dy, fmt_g, axis=0, block=block)
+    return jnp.matmul(xq.T, dyq, preferred_element_type=jnp.float32
+                      ).astype(x.dtype)

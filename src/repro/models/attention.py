@@ -2,6 +2,11 @@
 
 The score/value BMMs are MX-quantized when ``qcfg.attn`` is set (the MX
 emulation library quantizes MatMul/BMM inputs); softmax runs in fp32.
+The q/k/v/o *projections* go through `qdense` -> `qmatmul`, whose custom
+VJP routes their forward, dgrad, and wgrad GEMMs to the fused Pallas
+kernels in the per-pass formats of ``qcfg`` — attention gradients are
+quantized at these projection GEMMs (the dominant cost), while the BMM
+backward stays straight-through bf16.
 
 `flash_attention` is the TPU-idiomatic exact attention: lax.scan over query
 chunks with an inner scan over KV chunks carrying online-softmax state

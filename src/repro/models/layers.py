@@ -52,7 +52,12 @@ def dense_init(key, d_in: int, d_out: int, std: Optional[float] = None,
 
 
 def qdense(p, x: jax.Array, qcfg: QuantConfig) -> jax.Array:
-    """MX-quantized dense layer. Bias add stays bf16 (vector op)."""
+    """MX-quantized dense layer. Bias add stays bf16 (vector op).
+
+    The projection runs through `qmatmul`'s custom VJP, so its forward,
+    dgrad, and wgrad GEMMs each hit the fused quantize-on-load Pallas
+    kernels in their per-pass formats (a_fwd/w_fwd, g_bwd/w_bwd,
+    a_bwd/g_bwd) whenever ``qcfg`` is kernel-eligible."""
     w = p["w"].astype(x.dtype)
     y = qmatmul(x, w, qcfg)
     if "b" in p:

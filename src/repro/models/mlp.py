@@ -1,7 +1,10 @@
 """Feed-forward blocks: GeLU/ReLU MLP and SwiGLU/GeGLU gated variants.
 
 Activation functions run in bf16 (vector ops); all projections are
-MX-quantized GEMMs.  The SwiGLU hidden dim convention follows the paper
+MX-quantized GEMMs via `qdense`, so each of up/gate/down contributes three
+fused kernel GEMMs per training step (fwd blocks along K, dgrad along N,
+wgrad along tokens — the FFN is the paper's dominant quantized FLOP
+source).  The SwiGLU hidden dim convention follows the paper
 (§4.1 fn. 4): gated variants use 2/3 of the dense hidden width when parity
 is requested by the caller (configs pass explicit d_ff, so no silent
 resizing happens here).

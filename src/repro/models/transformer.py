@@ -11,6 +11,13 @@ rematerialization — this keeps HLO size and compile time independent of
 depth and bounds activation memory for the 16 GB/chip budget.  Cross-
 entropy streams over token chunks with the LM-head GEMM *inside* the chunk
 loop so full fp32 logits (up to vocab 256k) are never materialized.
+
+Every projection in the stack (attention q/k/v/o, MLP up/gate/down, MoE
+experts, LM head) is a `qmatmul` custom VJP, so a training step's GEMMs —
+forward, dgrad, and wgrad alike — dispatch to the fused MX Pallas kernels
+in the per-pass formats carried by the (static) QuantConfig; remat replays
+the quantized forward kernels during the backward pass, keeping the
+recomputation on the same fused path.
 """
 from __future__ import annotations
 

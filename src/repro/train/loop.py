@@ -28,7 +28,8 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import QuantConfig, SpikeDetector, apply_intervention
+from repro.core import (QuantConfig, SpikeDetector, apply_intervention,
+                        fused_gemms_enabled)
 from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
 
 __all__ = ["TrainerConfig", "Trainer", "make_train_step"]
@@ -101,6 +102,7 @@ class Trainer:
                                        self.tcfg.keep_ckpts)
         self._recoveries = 0
         self._step_times: List[float] = []
+        self._fused_gemms: Optional[bool] = None
 
     # ---- checkpoint / restore --------------------------------------------
     def _tree(self):
@@ -143,6 +145,16 @@ class Trainer:
 
     # ---- main loop ---------------------------------------------------------
     def run(self, n_steps: Optional[int] = None):
+        if self._fused_gemms is None:
+            # Latched at the first run: the dispatch decision is baked into
+            # _step_fn's jit cache at first trace, so later toggles of
+            # use_fused_gemms would not change the executing path.  Recorded
+            # so run reports can attribute throughput.
+            self._fused_gemms = fused_gemms_enabled()
+        if not self.events or self.events[-1].get("event") != "run_start":
+            self.events.append({"step": self.step, "event": "run_start",
+                                "fused_gemms": self._fused_gemms,
+                                "qcfg": self.qcfg.describe()})
         end = self.step + (n_steps or self.tcfg.total_steps)
         while self.step < end:
             t0 = time.monotonic()

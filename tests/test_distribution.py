@@ -107,10 +107,14 @@ _COMPRESS_SCRIPT = textwrap.dedent("""
     from repro.core import E4M3
     from repro.parallel import compressed_psum
 
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:  # jax < 0.5 keeps it under experimental
+        from jax.experimental.shard_map import shard_map
+
     mesh = jax.make_mesh((4,), ("pod",))
     x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 64))
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"))
+    @partial(shard_map, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"))
     def f(xs):
         return compressed_psum({"g": xs[0]}, "pod", E4M3)["g"][None]
 

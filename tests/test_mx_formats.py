@@ -6,6 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -e .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (E2M1, E2M3, E3M2, E4M3, E5M2, QuantConfig, mx_stats,

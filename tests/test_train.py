@@ -104,6 +104,9 @@ def test_trainer_runs_and_checkpoints(tmp_path):
     assert all(np.isfinite(h["loss"]) for h in hist)
     trainer._ckptr.wait()
     assert latest_step(str(tmp_path)) is not None
+    # run reports record whether step GEMMs hit the fused Pallas kernels
+    starts = [e for e in trainer.events if e["event"] == "run_start"]
+    assert starts and "fused_gemms" in starts[0]
 
 
 def test_trainer_restore_resumes_exactly(tmp_path):
