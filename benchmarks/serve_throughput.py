@@ -1,0 +1,109 @@
+"""Serving throughput: fused vs token-stepped prefill + engine decode.
+
+  PYTHONPATH=src python -m benchmarks.serve_throughput [--smoke]
+                                                       [--budget quick|full]
+
+Rows (CSV ``name,us_per_call,derived``):
+
+  serve.prefill_fused.<preset>    one `lm_prefill` pass       tok/s
+  serve.prefill_stepped.<preset>  T jitted decode steps       tok/s
+  serve.decode.<preset>           continuous-batching engine  tok/s
+
+``--smoke`` (CI) runs one preset at T=128 and **fails** unless the fused
+prefill is strictly faster than token-stepping — the acceptance bar for
+the fused path (a single traced forward vs T dispatched steps).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import preset
+from repro.models import lm_init, lm_prefill
+from repro.serve import SamplingParams, ServeEngine, prefill_into_cache
+from repro.serve.engine import _prefill
+from .common import Row, emit, time_fn
+
+PRESETS = ("bf16", "e4m3_bf16act", "mxfp8_e4m3")
+ARCH = "qwen2-7b"
+
+
+def _prefill_rows(params, cfg, qcfg, name: str, T: int, iters: int):
+    toks = jax.random.randint(jax.random.PRNGKey(0), (1, T), 0, cfg.vocab,
+                              jnp.int32)
+    fused_us = time_fn(
+        lambda: _prefill(params, toks, cfg, qcfg, T, None), iters=iters)
+    stepped_us = time_fn(
+        lambda: prefill_into_cache(params, toks, cfg, qcfg, T),
+        iters=max(2, iters // 2))
+    return [
+        Row(f"serve.prefill_fused.{name}", fused_us,
+            f"T={T} {T / fused_us * 1e6:.0f}tok/s"),
+        Row(f"serve.prefill_stepped.{name}", stepped_us,
+            f"T={T} {T / stepped_us * 1e6:.0f}tok/s "
+            f"speedup={stepped_us / fused_us:.1f}x"),
+    ], fused_us, stepped_us
+
+
+def _decode_row(params, cfg, qcfg, name: str, n_req: int, new_tokens: int):
+    engine = ServeEngine(params, cfg, qcfg, max_batch=4, max_len=128)
+    rng = np.random.RandomState(0)
+    for i in range(n_req):
+        engine.submit(rng.randint(1, cfg.vocab, size=8 + 4 * (i % 3)),
+                      SamplingParams(max_new_tokens=new_tokens, seed=i))
+    engine.drain()
+    s = engine.stats()
+    us = s["decode_time_s"] / max(s["decode_steps"], 1) * 1e6
+    return Row(f"serve.decode.{name}", us,
+               f"batch<=4 {s['decode_tok_s']:.0f}tok/s "
+               f"lat={s['mean_latency_s'] * 1e3:.0f}ms")
+
+
+def run(budget: str = "quick"):
+    T = 128 if budget == "quick" else 512
+    iters = 3 if budget == "quick" else 10
+    cfg = get_config(ARCH, "smoke")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    rows = []
+    for name in PRESETS:
+        qcfg = preset(name)
+        pr, _, _ = _prefill_rows(params, cfg, qcfg, name, T, iters)
+        rows.extend(pr)
+        rows.append(_decode_row(params, cfg, qcfg, name, n_req=6,
+                                new_tokens=16 if budget == "quick" else 64))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", default="quick", choices=["quick", "full"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: fused prefill must beat token-stepping "
+                         "at T=128 on one preset")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.smoke:
+        cfg = get_config(ARCH, "smoke")
+        params = lm_init(jax.random.PRNGKey(0), cfg)
+        rows, fused_us, stepped_us = _prefill_rows(
+            params, cfg, preset("e4m3_bf16act"), "e4m3_bf16act", T=128,
+            iters=3)
+        emit(rows)
+        if not fused_us < stepped_us:
+            print(f"# FAIL: fused prefill ({fused_us:.0f}us) not faster "
+                  f"than token-stepping ({stepped_us:.0f}us) at T=128",
+                  flush=True)
+            sys.exit(1)
+        print(f"# smoke ok: fused prefill {stepped_us / fused_us:.1f}x "
+              "faster than token-stepping at T=128", flush=True)
+        return
+    emit(run(args.budget))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,12 @@
 """Model zoo: MX-quantized transformer/hybrid/SSM stacks + proxy MLP."""
 from .transformer import (LMConfig, block_plan, init_cache, lm_apply,
-                          lm_decode_step, lm_init, lm_loss)
+                          lm_decode_step, lm_init, lm_loss, lm_prefill,
+                          prefill_supported)
 from .proxy import (ProxyConfig, proxy_apply, proxy_batch, proxy_init,
                     proxy_loss, teacher_init)
 
 __all__ = ["LMConfig", "block_plan", "init_cache", "lm_apply",
-           "lm_decode_step", "lm_init", "lm_loss",
+           "lm_decode_step", "lm_init", "lm_loss", "lm_prefill",
+           "prefill_supported",
            "ProxyConfig", "proxy_apply", "proxy_batch", "proxy_init",
            "proxy_loss", "teacher_init"]

@@ -27,8 +27,8 @@ import jax.numpy as jnp
 from repro.core import QuantConfig, quantize_mx
 from .layers import dense_init, norm_init, apply_norm, qdense, rope
 
-__all__ = ["attn_init", "attention", "attention_decode", "flash_attention",
-           "local_attention"]
+__all__ = ["attn_init", "attention", "attention_decode", "attention_prefill",
+           "flash_attention", "local_attention"]
 
 NEG_INF = -1e30
 
@@ -90,8 +90,18 @@ def flash_attention(q, k, v, qcfg: QuantConfig, causal: bool = True,
     dv = v.shape[-1]
     q_chunk = min(q_chunk, Tq)
     kv_chunk = min(kv_chunk, Tk)
-    assert Tq % q_chunk == 0 and Tk % kv_chunk == 0, (Tq, q_chunk, Tk, kv_chunk)
-    nq, nk = Tq // q_chunk, Tk // kv_chunk
+    # Non-multiple lengths (arbitrary serving prompts) are zero-padded up
+    # to a chunk multiple — padded kv positions are masked below, padded
+    # query rows are sliced off at the end — preserving O(T·chunk) live
+    # memory instead of degrading to one T-sized chunk.
+    pad_q = (-Tq) % q_chunk
+    pad_k = (-Tk) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = (Tq + pad_q) // q_chunk, (Tk + pad_k) // kv_chunk
     scale = 1.0 / math.sqrt(d)
 
     qc = q.reshape(B, nq, q_chunk, Hkv, G, d).transpose(1, 0, 3, 4, 2, 5)
@@ -111,9 +121,11 @@ def flash_attention(q, k, v, qcfg: QuantConfig, causal: bool = True,
             ktq = _maybe_quant(kt, qcfg, axis=-1)
             s = jnp.einsum("bhgqd,bhkd->bhgqk", qt.astype(jnp.float32),
                            ktq.astype(jnp.float32)) * scale
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            if pad_k:
+                s = jnp.where(kpos[None, :] < Tk, s, NEG_INF)
             if causal:
                 qpos = qi * q_chunk + jnp.arange(q_chunk) + q_offset
-                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
                 s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
@@ -130,9 +142,9 @@ def flash_attention(q, k, v, qcfg: QuantConfig, causal: bool = True,
         return None, out.astype(q.dtype)
 
     _, out = jax.lax.scan(q_step, None, (jnp.arange(nq), qc))
-    # out: (nq, B, Hkv, G, Cq, dv) -> (B, Tq, Hkv, G, dv)
-    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Tq, Hkv, G, dv)
-    return out
+    # out: (nq, B, Hkv, G, Cq, dv) -> (B, Tq+pad_q, Hkv, G, dv)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Tq + pad_q, Hkv, G, dv)
+    return out[:, :Tq]
 
 
 def local_attention(q, k, v, qcfg: QuantConfig, window: int) -> jax.Array:
@@ -205,20 +217,22 @@ def attention_decode(p, x, cache, *, qcfg: QuantConfig, n_heads: int,
     """One-token decode with a (k, v) ring/full cache.
 
     x: (B, 1, D); cache: {"k": (B, S, Hkv, d), "v": ..., } ;
-    pos: scalar int32 — current position (same for the whole batch).
+    pos: int32 scalar (whole batch at one position) or (B,) vector — the
+    per-row form is what lets the continuous-batching scheduler advance
+    slots that sit at different sequence lengths in one fixed-shape step.
     For windowed layers the cache is a ring buffer of size ``window``.
     """
     B = x.shape[0]
     S = cache["k"].shape[1]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None]
     q, k_new, v_new = _project_qkv(p, x, x, qcfg, n_heads, n_kv, d_head,
                                    positions, None, rope_theta,
                                    use_rope=use_rope)
     slot = pos % S if window > 0 else pos
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                     (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                     (0, slot, 0, 0))
+    rows = jnp.arange(B)
+    k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
     G = n_heads // n_kv
     qq = _maybe_quant(q[:, 0], qcfg, axis=-1)          # (B, Hkv, G, d)
     kk = _maybe_quant(k, qcfg, axis=-1)
@@ -228,11 +242,11 @@ def attention_decode(p, x, cache, *, qcfg: QuantConfig, n_heads: int,
     if window > 0:
         # Ring buffer: a slot is valid if it was written within the last
         # min(pos+1, window) steps.
-        age = (slot - kv_pos) % S
-        valid = age <= jnp.minimum(pos, window - 1)
+        age = (slot[:, None] - kv_pos[None, :]) % S
+        valid = age <= jnp.minimum(pos, window - 1)[:, None]
     else:
-        valid = kv_pos <= pos
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        valid = kv_pos[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     pr = jax.nn.softmax(s, axis=-1)
     prq = _maybe_quant(pr, qcfg, axis=-1)
     vv = _maybe_quant(v, qcfg, axis=-3)
@@ -240,3 +254,45 @@ def attention_decode(p, x, cache, *, qcfg: QuantConfig, n_heads: int,
     o = o.reshape(B, 1, n_heads * d_head).astype(x.dtype)
     out = qdense(p["wo"], o, qcfg)
     return out, {"k": k, "v": v}
+
+
+def attention_prefill(p, x, *, qcfg: QuantConfig, n_heads: int, n_kv: int,
+                      d_head: int, positions, cache_len: int,
+                      window: int = 0, rope_theta: float = 1e4,
+                      use_rope: bool = True, q_chunk: int = 512,
+                      kv_chunk: int = 1024):
+    """Fused prefill: full-sequence attention + the decode cache in one pass.
+
+    Computes exactly what ``attention`` computes for the causal forward (so
+    the single GEMM-heavy pass replaces T token steps), and additionally
+    assembles the (k, v) cache that ``attention_decode`` expects: a
+    zero-padded (B, cache_len, Hkv, d) buffer for global layers, or the
+    ring buffer holding the last ``min(T, window)`` tokens at slots
+    ``pos % ring`` for windowed layers.
+    """
+    B, T = x.shape[:2]
+    q, k, v = _project_qkv(p, x, x, qcfg, n_heads, n_kv, d_head, positions,
+                           None, rope_theta, use_rope=use_rope)
+    if window > 0:
+        o = local_attention(q, k, v, qcfg, window)
+    else:
+        o = flash_attention(q, k, v, qcfg, causal=True, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk)
+    out = qdense(p["wo"], o.reshape(B, T, n_heads * d_head), qcfg)
+    ring = min(cache_len, window) if window > 0 else cache_len
+    if window > 0:
+        m = min(T, ring)
+        # The last m positions occupy distinct ring slots; older tokens
+        # would have been overwritten during token-stepping anyway.
+        slots = jnp.arange(T - m, T) % ring
+        ck = jnp.zeros((B, ring) + k.shape[2:], k.dtype).at[:, slots].set(
+            k[:, T - m:])
+        cv = jnp.zeros((B, ring) + v.shape[2:], v.dtype).at[:, slots].set(
+            v[:, T - m:])
+    else:
+        if T > cache_len:
+            raise ValueError(f"prompt length {T} exceeds cache_len "
+                             f"{cache_len}")
+        pad = ((0, 0), (0, cache_len - T), (0, 0), (0, 0))
+        ck, cv = jnp.pad(k, pad), jnp.pad(v, pad)
+    return out, {"k": ck, "v": cv}

@@ -20,8 +20,16 @@ PARAM_DTYPE = jnp.float32     # master copies live in the optimizer
 COMPUTE_DTYPE = jnp.bfloat16
 
 __all__ = ["dense_init", "qdense", "norm_init", "apply_norm", "embed_init",
-           "embed_lookup", "rope", "kaiming_uniform", "trunc_normal",
-           "PARAM_DTYPE", "COMPUTE_DTYPE"]
+           "embed_lookup", "rope", "conv_tail", "kaiming_uniform",
+           "trunc_normal", "PARAM_DTYPE", "COMPUTE_DTYPE"]
+
+
+def conv_tail(x: jax.Array, width: int) -> jax.Array:
+    """Last ``width`` inputs of a causal conv stream (B, T, d), zero-padded
+    on the left for T < width — the decode carry a depthwise conv of
+    width ``width+1`` holds after consuming the full sequence."""
+    zeros = jnp.zeros((x.shape[0], width, x.shape[-1]), x.dtype)
+    return jnp.concatenate([zeros, x], 1)[:, -width:]
 
 
 def kaiming_uniform(key, shape, fan_in: Optional[int] = None,

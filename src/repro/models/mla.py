@@ -18,7 +18,7 @@ from repro.core import QuantConfig, quantize_mx
 from .layers import dense_init, norm_init, apply_norm, qdense, rope
 from .attention import flash_attention, _maybe_quant, NEG_INF
 
-__all__ = ["mla_init", "mla_apply", "mla_decode"]
+__all__ = ["mla_init", "mla_apply", "mla_decode", "mla_prefill"]
 
 
 def mla_init(key, d_model: int, n_heads: int, q_lora: int, kv_lora: int,
@@ -48,10 +48,9 @@ def _latents(p, x, qcfg, positions, rope_theta):
     return cq, ckv, kr
 
 
-def mla_apply(p, x, *, qcfg: QuantConfig, n_heads: int, nope: int,
-              rope_dim: int, v_head: int, positions,
-              rope_theta: float = 1e4, q_chunk: int = 512,
-              kv_chunk: int = 1024) -> jax.Array:
+def _forward(p, x, qcfg, n_heads, nope, rope_dim, v_head, positions,
+             rope_theta, q_chunk, kv_chunk):
+    """Full-sequence expanded-form attention; also returns the latents."""
     B, T, _ = x.shape
     cq, ckv, kr = _latents(p, x, qcfg, positions, rope_theta)
     q = qdense(p["w_uq"], cq, qcfg).reshape(B, T, n_heads, nope + rope_dim)
@@ -66,7 +65,32 @@ def mla_apply(p, x, *, qcfg: QuantConfig, n_heads: int, nope: int,
     o = flash_attention(qf, kf, v, qcfg, causal=True,
                         q_chunk=q_chunk, kv_chunk=kv_chunk)
     o = o.reshape(B, T, n_heads * v_head)
-    return qdense(p["wo"], o, qcfg)
+    return qdense(p["wo"], o, qcfg), ckv, kr
+
+
+def mla_apply(p, x, *, qcfg: QuantConfig, n_heads: int, nope: int,
+              rope_dim: int, v_head: int, positions,
+              rope_theta: float = 1e4, q_chunk: int = 512,
+              kv_chunk: int = 1024) -> jax.Array:
+    return _forward(p, x, qcfg, n_heads, nope, rope_dim, v_head, positions,
+                    rope_theta, q_chunk, kv_chunk)[0]
+
+
+def mla_prefill(p, x, *, qcfg: QuantConfig, n_heads: int, nope: int,
+                rope_dim: int, v_head: int, positions, cache_len: int,
+                rope_theta: float = 1e4, q_chunk: int = 512,
+                kv_chunk: int = 1024) -> Tuple[jax.Array, dict]:
+    """Fused prefill: expanded-form attention + the compressed latent cache
+    (what ``mla_decode`` consumes) in one pass.  Scores here use the
+    expanded form while decode uses the absorbed form — same math up to
+    fp associativity, so parity is tight-tolerance rather than bitwise."""
+    B, T, _ = x.shape
+    if T > cache_len:
+        raise ValueError(f"prompt length {T} exceeds cache_len {cache_len}")
+    out, ckv, kr = _forward(p, x, qcfg, n_heads, nope, rope_dim, v_head,
+                            positions, rope_theta, q_chunk, kv_chunk)
+    pad = ((0, 0), (0, cache_len - T), (0, 0))
+    return out, {"ckv": jnp.pad(ckv, pad), "kr": jnp.pad(kr, pad)}
 
 
 def mla_decode(p, x, cache, *, qcfg: QuantConfig, n_heads: int, nope: int,
@@ -74,19 +98,21 @@ def mla_decode(p, x, cache, *, qcfg: QuantConfig, n_heads: int, nope: int,
                ) -> Tuple[jax.Array, dict]:
     """Absorbed-form decode on the compressed cache.
 
-    cache: {"ckv": (B, S, kv_lora), "kr": (B, S, rope_dim)}; x: (B, 1, D).
+    cache: {"ckv": (B, S, kv_lora), "kr": (B, S, rope_dim)}; x: (B, 1, D);
+    pos: int32 scalar or (B,) per-row positions (continuous batching).
     Scores: q_nopeᵀ·W_uk·ckv + q_ropeᵀ·k_rope; context is accumulated in
     latent space then decompressed through W_uv once per step.
     """
     B = x.shape[0]
     S = cache["ckv"].shape[1]
     kv_lora = cache["ckv"].shape[-1]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None]
     cq, ckv_new, kr_new = _latents(p, x, qcfg, positions, rope_theta)
-    ckv = jax.lax.dynamic_update_slice(
-        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, pos, 0))
-    kr = jax.lax.dynamic_update_slice(
-        cache["kr"], kr_new.astype(cache["kr"].dtype), (0, pos, 0))
+    rows = jnp.arange(B)
+    ckv = cache["ckv"].at[rows, pos].set(
+        ckv_new[:, 0].astype(cache["ckv"].dtype))
+    kr = cache["kr"].at[rows, pos].set(kr_new[:, 0].astype(cache["kr"].dtype))
 
     q = qdense(p["w_uq"], cq, qcfg).reshape(B, n_heads, nope + rope_dim)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
@@ -100,8 +126,8 @@ def mla_decode(p, x, cache, *, qcfg: QuantConfig, n_heads: int, nope: int,
                     ckv.astype(jnp.float32))
          + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
                       kr.astype(jnp.float32))) * scale
-    valid = jnp.arange(S) <= pos
-    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    valid = jnp.arange(S)[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
     pr = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhs,bsc->bhc", _maybe_quant(pr, qcfg, -1),
                      _maybe_quant(ckv, qcfg, -2).astype(jnp.float32))

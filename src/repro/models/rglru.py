@@ -17,10 +17,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import QuantConfig
-from .layers import dense_init, qdense, trunc_normal
+from .layers import conv_tail, dense_init, qdense, trunc_normal
 
 __all__ = ["rec_block_init", "rec_block_apply", "rec_block_decode",
-           "rglru_scan"]
+           "rec_block_prefill", "rglru_scan"]
 
 _C = 8.0           # Griffin's fixed gate sharpness
 _CONV_W = 4        # temporal conv width
@@ -95,11 +95,22 @@ def rglru_step(p, x_t: jax.Array, h: jax.Array, qcfg: QuantConfig):
 
 def rec_block_apply(p, x: jax.Array, qcfg: QuantConfig) -> jax.Array:
     """Temporal-mixing block (train/prefill). x: (B, T, D)."""
+    return rec_block_prefill(p, x, qcfg)[0]   # cache assembly is DCE'd
+
+
+def rec_block_prefill(p, x: jax.Array, qcfg: QuantConfig):
+    """Fused prefill: full-sequence forward + the decode cache in one pass.
+
+    The returned state is what token-stepping ``rec_block_decode`` over
+    the same inputs would carry (conv window = last CONV_W-1 conv inputs,
+    h = associative-scan tail).
+    """
     gate = jax.nn.gelu(qdense(p["w_gate"], x, qcfg))
     main = qdense(p["w_main"], x, qcfg)
     c, _ = _conv1d(p, main)
-    h, _ = rglru_scan(p, c, qcfg)
-    return qdense(p["w_out"], h * gate, qcfg)
+    h, h_last = rglru_scan(p, c, qcfg)
+    out = qdense(p["w_out"], h * gate, qcfg)
+    return out, {"conv": conv_tail(main, _CONV_W - 1), "h": h_last}
 
 
 def rec_block_decode(p, x: jax.Array, cache: dict, qcfg: QuantConfig):

@@ -33,16 +33,18 @@ from repro.core import QuantConfig, qmatmul
 from repro.parallel.sharding import shard_act
 from .layers import (COMPUTE_DTYPE, apply_norm, dense_init, embed_init,
                      embed_lookup, norm_init, qdense)
-from .attention import attention, attention_decode, attn_init
-from .mla import mla_apply, mla_decode, mla_init
+from .attention import (attention, attention_decode, attention_prefill,
+                        attn_init)
+from .mla import mla_apply, mla_decode, mla_init, mla_prefill
 from .mlp import mlp_apply, mlp_init
 from .moe import moe_apply, moe_init
-from .rglru import rec_block_apply, rec_block_decode, rec_block_init
-from .xlstm import (mlstm_apply, mlstm_decode, mlstm_init, slstm_apply,
-                    slstm_decode, slstm_init)
+from .rglru import (rec_block_apply, rec_block_decode, rec_block_init,
+                    rec_block_prefill)
+from .xlstm import (mlstm_apply, mlstm_decode, mlstm_init, mlstm_prefill,
+                    slstm_apply, slstm_decode, slstm_init, slstm_prefill)
 
 __all__ = ["LMConfig", "lm_init", "lm_apply", "lm_loss", "init_cache",
-           "lm_decode_step", "block_plan"]
+           "lm_decode_step", "lm_prefill", "prefill_supported", "block_plan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -431,7 +433,9 @@ def lm_loss(params, batch, cfg: LMConfig, qcfg: QuantConfig):
 def _cache_init(kind: str, cfg: LMConfig, B: int, S: int):
     dt = COMPUTE_DTYPE
     if kind in ("attn", "dense_attn"):
-        s = min(S, cfg.window) if cfg.window else S
+        # Only "attn" blocks honor the local window (ring buffer);
+        # "dense_attn" lead layers attend globally in decode/prefill.
+        s = min(S, cfg.window) if (cfg.window and kind == "attn") else S
         shp = (B, s, cfg.n_kv_heads, cfg.d_head)
         if cfg.mla:
             return {"ckv": jnp.zeros((B, S, cfg.kv_lora), dt),
@@ -490,7 +494,8 @@ def _block_decode(h, p, cache, kind, cfg, qcfg, pos, enc_out=None):
         if kind == "dec_attn" and enc_out is not None:
             hx = apply_norm(p["ln_x"], h, qcfg, cfg.norm)
             B = h.shape[0]
-            positions = jnp.full((B, 1), pos, jnp.int32)
+            positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32),
+                                         (B,))[:, None]
             h = h + attention(p["xattn"], hx, qcfg=qcfg, n_heads=cfg.n_heads,
                               n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
                               positions=positions, xkv=enc_out,
@@ -529,9 +534,13 @@ def _block_decode(h, p, cache, kind, cfg, qcfg, pos, enc_out=None):
 
 def lm_decode_step(params, cache, tok, pos, cfg: LMConfig,
                    qcfg: QuantConfig, enc_out=None):
-    """One decode step.  tok: (B, 1) int32; pos: scalar int32.
+    """One decode step.  tok: (B, 1) int32; pos: scalar int32 (whole batch
+    at the same position) or (B,) int32 per-row positions — the latter is
+    what the continuous-batching scheduler uses, where each slot sits at
+    its own sequence length.
 
     Returns (logits (B, vocab), new_cache)."""
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (tok.shape[0],))
     h = shard_act(embed_lookup(params["embed"], tok))
     plan = _decoder_plan(cfg)
     new_caches = []
@@ -559,3 +568,131 @@ def lm_decode_step(params, cache, tok, pos, cfg: LMConfig,
     h = apply_norm(params["final_ln"], h, qcfg, cfg.norm)
     logits = _head_matmul(params, h[:, 0], cfg, qcfg)
     return logits, new_caches
+
+
+# --------------------------------------------------------------------------
+# fused prefill (serving)
+# --------------------------------------------------------------------------
+def prefill_supported(cfg: LMConfig) -> bool:
+    """Whether ``lm_prefill`` covers this config (any decoder-only stack);
+    encoder-decoder and modality-frontend configs fall back to
+    token-stepping in the serving engine."""
+    return cfg.enc_layers == 0 and cfg.frontend == "none"
+
+
+def _block_prefill(h, p, kind, cfg: LMConfig, qcfg: QuantConfig, positions,
+                   cache_len: int):
+    """Full-sequence block forward that also emits the decode-cache entry
+    (the fused counterpart of ``_block_decode``)."""
+    if kind in ("attn", "dense_attn"):
+        hn = apply_norm(p["ln1"], h, qcfg, cfg.norm)
+        if cfg.mla:
+            a, nc = mla_prefill(p["attn"], hn, qcfg=qcfg, n_heads=cfg.n_heads,
+                                nope=cfg.nope_dim, rope_dim=cfg.rope_dim,
+                                v_head=cfg.v_head, positions=positions,
+                                cache_len=cache_len, rope_theta=cfg.rope_theta,
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        else:
+            a, nc = attention_prefill(
+                p["attn"], hn, qcfg=qcfg, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, d_head=cfg.d_head, positions=positions,
+                cache_len=cache_len,
+                window=cfg.window if kind == "attn" else 0,
+                rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk,
+                kv_chunk=cfg.kv_chunk)
+        h = h + a
+        hn2 = apply_norm(p["ln2"], h, qcfg, cfg.norm)
+        if "moe" in p:
+            B, T, D = hn2.shape
+            # Serving capacity matches _block_decode (generous 4.0): the
+            # training capacity would drop prompt tokens that per-step
+            # decode never drops.
+            y, _ = moe_apply(p["moe"], hn2.reshape(B * T, D), qcfg,
+                             top_k=cfg.top_k, act=cfg.act,
+                             capacity_factor=4.0)
+            y = y.reshape(B, T, D)
+            if "shared" in p:
+                y = y + mlp_apply(p["shared"], hn2, qcfg, cfg.act)
+        else:
+            y = mlp_apply(p["mlp"], hn2, qcfg, cfg.act)
+        return h + y, nc
+    if kind == "rec":
+        a, nc = rec_block_prefill(p["rec"],
+                                  apply_norm(p["ln1"], h, qcfg, cfg.norm),
+                                  qcfg)
+        h = h + a
+        h = h + mlp_apply(p["mlp"], apply_norm(p["ln2"], h, qcfg, cfg.norm),
+                          qcfg, cfg.act)
+        return h, nc
+    if kind == "mlstm":
+        a, nc = mlstm_prefill(p["cell"],
+                              apply_norm(p["ln"], h, qcfg, cfg.norm),
+                              qcfg, cfg.n_heads)
+        return h + a, nc
+    if kind == "slstm":
+        a, nc = slstm_prefill(p["cell"],
+                              apply_norm(p["ln"], h, qcfg, cfg.norm),
+                              qcfg, cfg.n_heads)
+        return h + a, nc
+    raise ValueError(f"fused prefill does not support block kind {kind!r}")
+
+
+def lm_prefill(params, tokens, cfg: LMConfig, qcfg: QuantConfig,
+               max_len: int, logit_positions=None):
+    """Fused single-pass prefill: one full forward builds the decode cache.
+
+    The production replacement for feeding a prompt token-by-token through
+    ``lm_decode_step`` (T jitted steps → 1 fused pass; GEMMs go through the
+    same MX ``qcfg`` as training).  tok: (B, T) int32 with T <= max_len.
+
+    ``logit_positions`` (optional (B,) int32, default T-1 everywhere)
+    selects the position whose logits are returned per row — the serving
+    engine right-pads prompts to shape buckets and asks for the logits at
+    each true prompt end (later decode steps overwrite padded cache slots
+    before they ever become attendable, so padding is causally inert for
+    positional caches).
+
+    Returns (logits (B, vocab), cache) with ``cache`` exactly matching the
+    ``init_cache`` tree, ready for ``lm_decode_step`` at position T.
+
+    MoE caveat: routing capacity here is bounded over the whole batched
+    prompt (at the decode path's generous 4.0 factor), while token-stepped
+    warmup routes one token per step and never hits capacity — under
+    extreme (>4x mean) expert imbalance the two can drop different tokens,
+    so MoE parity is routing-tolerance rather than quantization-tight (and
+    the engine never pads MoE prompts, see ServeEngine.pad_safe).
+    """
+    if not prefill_supported(cfg):
+        raise NotImplementedError(
+            "fused prefill covers decoder-only stacks; encoder-decoder / "
+            "frontend configs use token-stepped warmup")
+    B, T = tokens.shape
+    h = shard_act(embed_lookup(params["embed"], tokens))
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    plan = _decoder_plan(cfg)
+    caches = []
+    for (pattern, n_rep), gp in zip(plan, params["blocks"]):
+        def body(h, lp, pattern=pattern):
+            nc = {}
+            for j, kind in enumerate(pattern):
+                h, c = _block_prefill(h, lp[f"b{j}"], kind, cfg, qcfg,
+                                      positions, max_len)
+                nc[f"b{j}"] = c
+            return h, nc
+
+        if cfg.scan_layers and n_rep > 1:
+            h, gc = jax.lax.scan(body, h, gp)
+        else:
+            gc_list = []
+            for r in range(n_rep):
+                lp = jax.tree.map(lambda a, r=r: a[r], gp)
+                h, c = body(h, lp)
+                gc_list.append(c)
+            gc = jax.tree.map(lambda *xs: jnp.stack(xs), *gc_list)
+        caches.append(gc)
+    h = apply_norm(params["final_ln"], h, qcfg, cfg.norm)
+    if logit_positions is None:
+        logit_positions = jnp.full((B,), T - 1, jnp.int32)
+    h_last = h[jnp.arange(B), logit_positions]          # (B, D)
+    logits = _head_matmul(params, h_last, cfg, qcfg)
+    return logits, caches

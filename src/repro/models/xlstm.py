@@ -20,11 +20,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import QuantConfig
-from .layers import dense_init, norm_init, apply_norm, qdense, trunc_normal
+from .layers import (apply_norm, conv_tail, dense_init, norm_init, qdense,
+                     trunc_normal)
 from .mlp import mlp_init, mlp_apply
 
-__all__ = ["mlstm_init", "mlstm_apply", "mlstm_decode",
-           "slstm_init", "slstm_apply", "slstm_decode"]
+__all__ = ["mlstm_init", "mlstm_apply", "mlstm_decode", "mlstm_prefill",
+           "slstm_init", "slstm_apply", "slstm_decode", "slstm_prefill"]
 
 _PF = 2            # mLSTM projection factor
 _CONV_W = 4
@@ -206,7 +207,8 @@ def _mlstm_qkvif(p, u, qcfg, n_heads):
     return q, k, v, it, ft
 
 
-def mlstm_apply(p, x: jax.Array, qcfg: QuantConfig, n_heads: int) -> jax.Array:
+def _mlstm_forward(p, x, qcfg, n_heads):
+    """Full-sequence mLSTM block. Returns (out, conv_state, cell_state)."""
     B, T, D = x.shape
     up = qdense(p["w_up"], x, qcfg)
     u, z = jnp.split(up, 2, axis=-1)
@@ -214,13 +216,25 @@ def mlstm_apply(p, x: jax.Array, qcfg: QuantConfig, n_heads: int) -> jax.Array:
     u_c = jax.nn.silu(u_c)
     q, k, v, it, ft = _mlstm_qkvif(p, u_c, qcfg, n_heads)
     if T >= 2 * MLSTM_CHUNK:
-        h, _ = _mlstm_chunkwise(q, k, v, it, ft)
+        h, state = _mlstm_chunkwise(q, k, v, it, ft)
     else:
-        h, _ = _mlstm_scan(q, k, v, it, ft)
+        h, state = _mlstm_scan(q, k, v, it, ft)
     h = h.reshape(B, T, -1).astype(x.dtype)
     h = apply_norm(p["out_ln"], h, qcfg) + p["skip_scale"].astype(x.dtype) * u_c
     y = h * jax.nn.silu(z)
-    return qdense(p["w_down"], y, qcfg)
+    return qdense(p["w_down"], y, qcfg), conv_tail(u, _CONV_W - 1), state
+
+
+def mlstm_apply(p, x: jax.Array, qcfg: QuantConfig, n_heads: int) -> jax.Array:
+    return _mlstm_forward(p, x, qcfg, n_heads)[0]
+
+
+def mlstm_prefill(p, x: jax.Array, qcfg: QuantConfig, n_heads: int):
+    """Fused prefill: full-sequence forward + the decode cache in one pass
+    (conv window over the pre-conv up-projection, chunkwise/scan-exact
+    (C, n, m) cell state at step T)."""
+    out, conv_state, (C, n, m) = _mlstm_forward(p, x, qcfg, n_heads)
+    return out, {"conv": conv_state, "C": C, "n": n, "m": m}
 
 
 def mlstm_decode(p, x: jax.Array, cache: dict, qcfg: QuantConfig,
@@ -281,7 +295,8 @@ def _slstm_step(p_r, carry, wx_t, n_heads):
     return (c, n, m_new, h_new), h_new
 
 
-def slstm_apply(p, x: jax.Array, qcfg: QuantConfig, n_heads: int) -> jax.Array:
+def _slstm_forward(p, x, qcfg, n_heads):
+    """Full-sequence sLSTM block. Returns (out, final carry)."""
     B, T, D = x.shape
     dh = D // n_heads
     wx = qdense(p["w_gates"], x, qcfg).astype(jnp.float32)   # (B,T,4D)
@@ -294,13 +309,24 @@ def slstm_apply(p, x: jax.Array, qcfg: QuantConfig, n_heads: int) -> jax.Array:
     def step(carry, wx_t):
         return _slstm_step(p_r, carry, wx_t, n_heads)
 
-    _, h = jax.lax.scan(step, carry, wx.transpose(1, 0, 2))
+    carry, h = jax.lax.scan(step, carry, wx.transpose(1, 0, 2))
     h = h.transpose(1, 0, 2, 3).reshape(B, T, D).astype(x.dtype)
     y = qdense(p["w_out"], apply_norm(p["out_ln"], h, qcfg), qcfg)
     # post-FFN (GeGLU 4/3) with pre-norm residual
     y = y + mlp_apply(p["ffn"], apply_norm(p["ffn_ln"], y, qcfg), qcfg,
                       act="geglu")
-    return y
+    return y, carry
+
+
+def slstm_apply(p, x: jax.Array, qcfg: QuantConfig, n_heads: int) -> jax.Array:
+    return _slstm_forward(p, x, qcfg, n_heads)[0]
+
+
+def slstm_prefill(p, x: jax.Array, qcfg: QuantConfig, n_heads: int):
+    """Fused prefill: full-sequence forward + the (c, n, m, h) decode state
+    carried out of the scan in one pass."""
+    out, (c, n, m, h) = _slstm_forward(p, x, qcfg, n_heads)
+    return out, {"c": c, "n": n, "m": m, "h": h}
 
 
 def slstm_decode(p, x: jax.Array, cache: dict, qcfg: QuantConfig,

@@ -1,3 +1,7 @@
+"""MX serving: fused prefill, continuous batching, per-request sampling."""
+from .scheduler import Request, SamplingParams, Scheduler, sample_tokens
+from .engine import ServeEngine
 from .decode import generate, prefill_into_cache
 
-__all__ = ["generate", "prefill_into_cache"]
+__all__ = ["Request", "SamplingParams", "Scheduler", "sample_tokens",
+           "ServeEngine", "generate", "prefill_into_cache"]

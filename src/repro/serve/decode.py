@@ -1,21 +1,30 @@
-"""Batched serving: prefill-free cache warmup + greedy/temperature decode.
+"""Thin serving wrappers: batch `generate` + the token-stepped oracle.
 
-`generate` drives `lm_decode_step` with a jitted per-token step; requests
-are batched (B sequences advance in lockstep — continuous batching is a
-scheduler-level concern above this loop).  The decode path exercises the
-same MX quantization config as training, so serving in MX formats is a
-first-class mode (weights-only E4M3 being the paper-recommended recipe).
+The serving subsystem proper lives in :mod:`repro.serve.engine`
+(``ServeEngine``: fused single-pass prefill via ``models.lm_prefill``,
+continuous-batching scheduler, per-request sampling params, cached jitted
+steps keyed on static ``(cfg, qcfg)``).  This module keeps the two
+historical entry points as wrappers over it:
+
+  * ``generate`` submits each prompt row as a request and drains the
+    engine — lockstep batched decode falls out as the special case where
+    every request is admitted at once.
+  * ``prefill_into_cache`` stays token-stepped on purpose: it is the
+    exact-per-token *oracle* the parity suite (tests/test_serve.py) pins
+    the fused prefill against.  It now routes through the module-level
+    cached decode step, fixing the old per-call ``jax.jit`` retracing.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import QuantConfig
-from repro.models import LMConfig, init_cache, lm_decode_step
+from repro.models import LMConfig, init_cache
+from .engine import ServeEngine, _decode_step
+from .scheduler import SamplingParams
 
 __all__ = ["generate", "prefill_into_cache"]
 
@@ -24,47 +33,36 @@ def prefill_into_cache(params, tokens, cfg: LMConfig, qcfg: QuantConfig,
                        max_len: int):
     """Feed a prompt token-by-token through the decode path (exact, simple).
 
-    A fused prefill (single forward building the cache in one pass) is the
-    production path for long prompts; token-stepping is used here because
-    it reuses exactly one code path for correctness testing."""
+    This is the reference implementation the fused ``lm_prefill`` is
+    verified against; production serving goes through ``ServeEngine``,
+    which builds the cache in one forward pass.  Every step hits the
+    process-wide jit cache (static ``(cfg, qcfg)``), so repeated calls do
+    not re-trace."""
     B, T = tokens.shape
     cache = init_cache(cfg, B, max_len)
-
-    @jax.jit
-    def step(cache, tok, pos):
-        return lm_decode_step(params, cache, tok, pos, cfg, qcfg)
-
     logits = None
     for t in range(T):
-        logits, cache = step(cache, tokens[:, t:t + 1], jnp.int32(t))
+        logits, cache = _decode_step(params, cache, tokens[:, t:t + 1],
+                                     jnp.int32(t), cfg, qcfg)
     return logits, cache
 
 
 def generate(params, prompt, cfg: LMConfig, qcfg: QuantConfig,
              max_new_tokens: int = 32, temperature: float = 0.0,
              seed: int = 0, max_len: Optional[int] = None):
-    """Greedy (or sampled) continuation of `prompt` (B, T)."""
+    """Greedy (or sampled) continuation of `prompt` (B, T) — a thin wrapper
+    that submits one request per row to a ``ServeEngine`` and drains it.
+    Each row gets its own RNG stream (seed + row), so identical rows still
+    sample independent continuations."""
     B, T = prompt.shape
     max_len = max_len or (T + max_new_tokens)
-    logits, cache = prefill_into_cache(params, prompt, cfg, qcfg, max_len)
-
-    @jax.jit
-    def step(cache, tok, pos):
-        return lm_decode_step(params, cache, tok, pos, cfg, qcfg)
-
-    key = jax.random.PRNGKey(seed)
-    out = []
-    tok = _select(logits, temperature, key)
-    for i in range(max_new_tokens):
-        out.append(tok)
-        logits, cache = step(cache, tok, jnp.int32(T + i))
-        key = jax.random.fold_in(key, i)
-        tok = _select(logits, temperature, key)
-    return jnp.concatenate(out, axis=1)
-
-
-def _select(logits, temperature, key):
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature)[:, None] \
-        .astype(jnp.int32)
+    engine = ServeEngine(params, cfg, qcfg, max_batch=B, max_len=max_len)
+    rids = [engine.submit(np.asarray(prompt[i]),
+                          SamplingParams(temperature=temperature,
+                                         max_new_tokens=max_new_tokens,
+                                         seed=seed + i))
+            for i in range(B)]
+    done = {r.rid: r for r in engine.drain()}
+    out = np.stack([np.asarray(done[r].tokens, np.int32)[:max_new_tokens]
+                    for r in rids])
+    return jnp.asarray(out)

@@ -1,0 +1,248 @@
+"""ServeEngine: fused prefill + continuous batching over cached jit steps.
+
+The serving counterpart of ``train.loop.Trainer``: a facade whose
+``submit``/``step``/``drain`` drive the scheduler and whose ``events``
+list mirrors ``Trainer.events`` (submit / prefill / request_done records
+with latency and throughput fields; ``stats()`` aggregates them).
+
+Compilation discipline — the former ``decode.py`` stub rebuilt ``jax.jit``
+closures on every call; here every jitted function lives at module level
+with the (frozen, hashable) ``LMConfig``/``QuantConfig`` as static
+arguments, so the trace cache is keyed on ``(cfg, qcfg)`` + shapes and is
+shared by every engine, wrapper, benchmark, and test in the process:
+
+  * ``_serve_step``   — fixed (max_batch, 1) decode + per-slot sampling;
+    admission swaps one cache row (``_insert_row``) and never recompiles.
+  * ``_prefill``      — fused single-pass ``lm_prefill``.  For purely
+    positional caches (global attention, no ring buffer / recurrent
+    state) prompts are right-padded to power-of-two buckets: padded cache
+    slots sit beyond the causal mask until a later decode step overwrites
+    them, so padding is numerically inert and the engine compiles one
+    prefill per bucket instead of one per prompt length.
+  * ``_decode_step``  — token-stepped fallback (encoder-decoder and
+    frontend configs) and the parity oracle for the fused path.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import QuantConfig
+from repro.models import (LMConfig, block_plan, init_cache, lm_decode_step,
+                          lm_prefill, prefill_supported)
+from .scheduler import Request, SamplingParams, Scheduler, sample_tokens
+
+__all__ = ["ServeEngine"]
+
+
+@partial(jax.jit, static_argnums=(4, 5))
+def _decode_step(params, cache, tok, pos, cfg: LMConfig, qcfg: QuantConfig):
+    return lm_decode_step(params, cache, tok, pos, cfg, qcfg)
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4))
+def _prefill(params, tokens, cfg: LMConfig, qcfg: QuantConfig, max_len: int,
+             logit_positions):
+    return lm_prefill(params, tokens, cfg, qcfg, max_len, logit_positions)
+
+
+# The engine rebinds its cache to the step result every call, so the input
+# cache buffers are donated: XLA updates the KV/state arrays in place
+# instead of copying the full (max_batch, max_len) cache per token (and
+# per admission).  Donation is a no-op (with a one-time notice) on CPU.
+@partial(jax.jit, static_argnums=(4, 5, 10, 11), donate_argnums=(1,))
+def _serve_step(params, cache, tok, pos, cfg: LMConfig, qcfg: QuantConfig,
+                temp, top_k, seeds, n_gen, any_sampled: bool,
+                any_top_k: bool):
+    """One fixed-shape engine step: batched decode + per-slot sampling.
+    The two static sampling switches add at most 4 traces per (cfg, qcfg)
+    and keep the all-greedy hot path free of sort/categorical work."""
+    logits, cache = lm_decode_step(params, cache, tok, pos, cfg, qcfg)
+    nxt = sample_tokens(logits, temp, top_k, seeds, n_gen,
+                        any_sampled, any_top_k)
+    return nxt, cache
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _insert_row(full, one, slot):
+    """Copy a single-request (B=1) cache into batch-cache row ``slot``."""
+    return jax.tree.map(
+        lambda f, o: jax.lax.dynamic_update_slice_in_dim(
+            f, o.astype(f.dtype), slot, axis=1), full, one)
+
+
+_sample_jit = jax.jit(sample_tokens, static_argnums=(5, 6))
+
+
+def _bucket(n: int) -> int:
+    b = 16
+    while b < n:
+        b *= 2
+    return b
+
+
+class ServeEngine:
+    """Continuous-batching serving engine for one (params, cfg, qcfg).
+
+    ``prefill``: "auto" (fused when the config supports it), "fused"
+    (force; raises for unsupported configs) or "stepped" (token-by-token —
+    the parity oracle).  ``bucket_prompts=False`` disables prompt-shape
+    bucketing even where it is causally safe (exact-length compiles).
+    """
+
+    def __init__(self, params, cfg: LMConfig, qcfg: QuantConfig, *,
+                 max_batch: int = 4, max_len: int = 256,
+                 eos_id: Optional[int] = None, prefill: str = "auto",
+                 bucket_prompts: bool = True):
+        if prefill not in ("auto", "fused", "stepped"):
+            raise ValueError(f"unknown prefill mode {prefill!r}")
+        fused_ok = prefill_supported(cfg)
+        if prefill == "fused" and not fused_ok:
+            raise ValueError(f"config {cfg.name!r} has no fused prefill "
+                             "(encoder-decoder / frontend)")
+        self.params = params
+        self.cfg = cfg
+        self.qcfg = qcfg
+        self.max_len = max_len
+        self.fused = fused_ok if prefill == "auto" else prefill == "fused"
+        kinds = {k for pat, _ in block_plan(cfg) for k in pat}
+        # Bucketing is causally inert only for purely positional caches:
+        # no recurrent state, no ring buffer — and no MoE, where padded
+        # tokens would consume expert capacity and perturb real tokens.
+        self.pad_safe = (self.fused and bucket_prompts and cfg.window == 0
+                         and cfg.n_experts == 0
+                         and kinds <= {"attn", "dense_attn"})
+        self.sched = Scheduler(max_batch, max_len, eos_id)
+        self.cache = init_cache(cfg, max_batch, max_len)
+        self.events: List[Dict[str, Any]] = []
+        self.finished: Dict[int, Request] = {}
+        self._next_rid = 0
+        self._decode_steps = 0
+        self._decode_time = 0.0
+        self._decode_tokens = 0
+        self._prefill_tokens = 0
+        self._prefill_time = 0.0
+
+    # ---- request lifecycle -------------------------------------------------
+    def submit(self, prompt, sampling: Optional[SamplingParams] = None) -> int:
+        """Queue a prompt (1-D int sequence). Returns the request id."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if prompt.size > self.max_len:
+            raise ValueError(f"prompt length {prompt.size} exceeds "
+                             f"max_len {self.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt,
+                      sampling=sampling or SamplingParams(),
+                      submit_t=time.perf_counter())
+        self.sched.submit(req)
+        self.events.append({"event": "submit", "rid": rid,
+                            "prompt_len": int(prompt.size)})
+        return rid
+
+    def _prefill_one(self, req: Request):
+        """Warm a (1, S) cache for one request; returns (logits, cache,
+        padded_len)."""
+        T = req.prompt.size
+        toks = req.prompt
+        if self.fused:
+            Tp = min(_bucket(T), self.max_len) if self.pad_safe else T
+            if Tp > T:
+                toks = np.concatenate([toks, np.zeros(Tp - T, np.int32)])
+            logits, cache = _prefill(
+                self.params, jnp.asarray(toks)[None], self.cfg, self.qcfg,
+                self.max_len, jnp.asarray([T - 1], jnp.int32))
+            return logits, cache, Tp
+        cache = init_cache(self.cfg, 1, self.max_len)
+        tj = jnp.asarray(toks)[None]
+        logits = None
+        for t in range(T):
+            logits, cache = _decode_step(self.params, cache, tj[:, t:t + 1],
+                                         jnp.int32(t), self.cfg, self.qcfg)
+        return logits, cache, T
+
+    def _admit(self) -> List[Request]:
+        finished = []
+        for slot, req in self.sched.admissions():
+            t0 = time.perf_counter()
+            logits, one_cache, padded = self._prefill_one(req)
+            sp = req.sampling
+            first = _sample_jit(
+                logits, jnp.asarray([sp.temperature], jnp.float32),
+                jnp.asarray([sp.top_k], jnp.int32),
+                jnp.asarray([sp.seed], jnp.int32),
+                jnp.asarray([0], jnp.int32),
+                sp.temperature > 0.0, sp.top_k > 0)
+            self.cache = _insert_row(self.cache, one_cache, slot)
+            jax.block_until_ready(first)
+            dt = time.perf_counter() - t0
+            self._prefill_tokens += int(req.prompt.size)
+            self._prefill_time += dt
+            self.events.append({"event": "prefill", "rid": req.rid,
+                                "slot": slot,
+                                "prompt_len": int(req.prompt.size),
+                                "padded_len": padded, "fused": self.fused,
+                                "time_s": dt})
+            if self.sched.place(slot, req, int(first[0]), req.prompt.size):
+                finished.append(req)
+        return finished
+
+    # ---- stepping ----------------------------------------------------------
+    def step(self) -> List[Request]:
+        """Admit what fits, then advance every live slot one token.
+        Returns the requests that finished during this call."""
+        finished = self._admit()
+        if self.sched.n_active:
+            tok, pos, temp, top_k, seeds, n_gen = self.sched.batch_arrays()
+            t0 = time.perf_counter()
+            nxt, self.cache = _serve_step(self.params, self.cache, tok, pos,
+                                          self.cfg, self.qcfg, temp, top_k,
+                                          seeds, n_gen,
+                                          bool((self.sched.temp > 0).any()),
+                                          bool((self.sched.top_k > 0).any()))
+            nxt = np.asarray(nxt)
+            dt = time.perf_counter() - t0
+            n_live = self.sched.n_active
+            self._decode_steps += 1
+            self._decode_time += dt
+            self._decode_tokens += n_live
+            finished.extend(self.sched.record_step(nxt))
+        for req in finished:
+            self.finished[req.rid] = req
+            self.events.append({"event": "request_done", "rid": req.rid,
+                                "reason": req.finish_reason,
+                                "n_tokens": len(req.tokens),
+                                "latency_s": req.latency_s})
+        return finished
+
+    def drain(self) -> List[Request]:
+        """Run until queue and slots are empty; returns every finished
+        request (rid order)."""
+        while self.sched.has_work:
+            self.step()
+        return [self.finished[rid] for rid in sorted(self.finished)]
+
+    # ---- reporting ---------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        lat = [r.latency_s for r in self.finished.values()
+               if r.latency_s is not None]
+        return {
+            "n_finished": float(len(self.finished)),
+            "prefill_tokens": float(self._prefill_tokens),
+            "prefill_time_s": self._prefill_time,
+            "prefill_tok_s": self._prefill_tokens / max(self._prefill_time,
+                                                        1e-9),
+            "decode_steps": float(self._decode_steps),
+            "decode_tokens": float(self._decode_tokens),
+            "decode_time_s": self._decode_time,
+            "decode_tok_s": self._decode_tokens / max(self._decode_time,
+                                                      1e-9),
+            "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+        }

@@ -1,0 +1,107 @@
+"""Property-based tests (hypothesis): MX quantizer algebra + watchdog.
+
+Extends the 1-D floor-mode properties in test_mx_formats.py with the
+invariants the serving/training stack actually leans on, across all
+scale modes:
+
+  * idempotence      Q(Q(x)) == Q(x)          (re-serving quantized
+                     weights is a no-op);
+  * sign preservation  sign(Q(x)) in {0, sign(x)};
+  * per-block scale invariance  Q(x * 2^k) == Q(x) * 2^k for block-wise
+    positive power-of-two rescaling (the shared exponent absorbs it);
+  * SpikeDetector never flags a monotonically decreasing loss series
+    (the recovery policy cannot fire on healthy training).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import SpikeDetector, get_format, quantize_mx  # noqa: E402
+
+FMTS = st.sampled_from(["e4m3", "e5m2", "e2m3", "e3m2", "e2m1"])
+MODES = st.sampled_from(["floor", "bump", "adaptive"])
+BLOCK = 8
+
+
+@st.composite
+def blocked_arrays(draw, n_blocks_max=4):
+    """(n_blocks, BLOCK) fp32 with magnitudes well inside the shared-
+    exponent clip range (so scale arithmetic is exact)."""
+    nb = draw(st.integers(1, n_blocks_max))
+    elem = st.one_of(st.just(0.0), st.floats(0.01, 64.0, width=32),
+                     st.floats(-64.0, -0.01, width=32))
+    vals = draw(st.lists(elem, min_size=nb * BLOCK, max_size=nb * BLOCK))
+    return np.asarray(vals, np.float32).reshape(nb, BLOCK)
+
+
+@given(x=blocked_arrays(), fmt=FMTS, mode=MODES)
+@settings(max_examples=60, deadline=None)
+def test_quantize_idempotent_all_scale_modes(x, fmt, mode):
+    f = get_format(fmt)
+    q1 = quantize_mx(jnp.asarray(x), f, axis=-1, block=BLOCK,
+                     scale_mode=mode)
+    q2 = quantize_mx(q1, f, axis=-1, block=BLOCK, scale_mode=mode)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@given(x=blocked_arrays(), fmt=FMTS, mode=MODES)
+@settings(max_examples=60, deadline=None)
+def test_quantize_preserves_sign(x, fmt, mode):
+    q = np.asarray(quantize_mx(jnp.asarray(x), get_format(fmt), axis=-1,
+                               block=BLOCK, scale_mode=mode))
+    # never flips sign (may flush small magnitudes to zero)
+    assert (np.sign(q) * np.sign(x) >= 0).all()
+    # and never zeroes a block's max (the value that sets the scale)
+    m = np.abs(x).max(-1)
+    qm = np.abs(q).max(-1)
+    assert (qm[m > 0] > 0).all()
+
+
+@given(x=blocked_arrays(), fmt=FMTS, mode=MODES,
+       data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_blockwise_power_of_two_scale_invariance(x, fmt, mode, data):
+    """Rescaling each block by its own positive power of two shifts the
+    shared exponent and nothing else: Q(x * 2^k) == Q(x) * 2^k."""
+    nb = x.shape[0]
+    ks = np.asarray(data.draw(st.lists(st.integers(-6, 6), min_size=nb,
+                                       max_size=nb)), np.int32)
+    s = (2.0 ** ks)[:, None].astype(np.float32)
+    f = get_format(fmt)
+    q = np.asarray(quantize_mx(jnp.asarray(x), f, axis=-1, block=BLOCK,
+                               scale_mode=mode))
+    qs = np.asarray(quantize_mx(jnp.asarray(x * s), f, axis=-1, block=BLOCK,
+                                scale_mode=mode))
+    np.testing.assert_array_equal(qs, q * s)
+
+
+@given(losses=st.lists(st.floats(1e-3, 1e3, allow_nan=False, width=32),
+                       min_size=1, max_size=100),
+       factor=st.floats(1.5, 1e3))
+@settings(max_examples=60, deadline=None)
+def test_spike_detector_never_flags_decreasing_losses(losses, factor):
+    """App.-B heuristic sanity: a monotonically decreasing finite loss
+    series can never trip the watchdog (no false-positive rollbacks on
+    healthy runs), for any spike factor > 1."""
+    series = sorted(set(float(l) for l in losses), reverse=True)
+    det = SpikeDetector(spike_factor=factor)
+    for loss in series:
+        assert not det.update(loss)
+    assert det.n_spikes == 0
+
+
+@given(losses=st.lists(st.floats(0.5, 10.0, allow_nan=False, width=32),
+                       min_size=2, max_size=50))
+@settings(max_examples=30, deadline=None)
+def test_spike_detector_always_flags_giant_spike(losses):
+    """...and a loss 1000x above everything seen always trips it."""
+    det = SpikeDetector(spike_factor=100.0)
+    for loss in losses:
+        det.update(float(loss))
+    assert det.update(1000.0 * max(losses))

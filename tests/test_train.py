@@ -155,6 +155,54 @@ def test_spike_triggers_rollback_and_intervention(tmp_path):
     assert all(np.isfinite(h["loss"]) for h in hist)
 
 
+def test_recovery_end_to_end_through_run_loop(tmp_path):
+    """Fig.-7 machinery, uninstrumented: a loss spike injected through the
+    *data/loss path* mid-`run()` must make the watchdog fire inside the
+    loop, roll the trainer back to the last checkpoint, swap the
+    QuantConfig via `apply_intervention`, emit a well-formed `recovery`
+    event, and finish the full step budget with finite losses."""
+    cfg = get_config("olmo-paper", "smoke")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    armed = {"spike": True}
+
+    def batch_fn(step):
+        b = dict(lm_input_arrays(step, cfg, 4, 32))
+        # poison exactly one step (first encounter only, so the post-
+        # rollback replay of the same step index proceeds cleanly)
+        poison = 1e6 if (step == 12 and armed.pop("spike", False)) else 1.0
+        b["poison"] = jnp.float32(poison)
+        return b
+
+    def loss_fn(p, b, q):
+        loss, m = lm_loss(p, {k: v for k, v in b.items() if k != "poison"},
+                          cfg, q)
+        return loss * b["poison"], m
+
+    tcfg = TrainerConfig(total_steps=20, ckpt_dir=str(tmp_path),
+                         ckpt_every=5, peak_lr=1e-3, spike_factor=5.0,
+                         auto_intervention="bf16_activations")
+    tr = Trainer(loss_fn, params, preset("mxfp8_e4m3"), batch_fn, tcfg=tcfg)
+    start_qcfg = tr.qcfg.describe()
+    tr.run(20)
+
+    recs = [e for e in tr.events if e["event"] == "recovery"]
+    assert len(recs) == 1
+    rec = recs[0]
+    assert rec["rolled_back"] is True
+    assert rec["step"] == 10                    # rolled back to ckpt@10
+    assert "spike@step12" in rec["reason"]
+    assert rec["from_qcfg"] == start_qcfg
+    assert rec["to_qcfg"] == tr.qcfg.describe() != start_qcfg
+    # bf16_activations intervention actually applied
+    assert tr.qcfg.a_fwd is None and tr.qcfg.ln_fmt is None
+    assert not tr.qcfg.attn
+    # training resumed from the rollback point and completed the budget
+    assert tr.step == 20
+    losses = [h["loss"] for h in tr.history]
+    assert all(np.isfinite(l) for l in losses)
+    assert sum(l > 1e4 for l in losses) == 1    # exactly the poisoned step
+
+
 def test_grad_bias_probe_on_lm():
     from repro.core import grad_bias_probe
     cfg = get_config("olmo-paper", "smoke")
