@@ -16,13 +16,14 @@ from . import (fig1_llm_instability, fig2_lr_sweep, fig3_act_ln,
                fig4_grad_bias, fig5_codes_clamp, fig6_mitigations,
                fig7_interventions, fig9_depth_width, fig10_optim_init,
                kernel_microbench, roofline, serve_throughput,
-               table1_mitigated_loss, table2_scaling_law)
+               table1_mitigated_loss, table2_scaling_law, train_throughput)
 from .common import emit, Row
 
 BENCHES = {
     "fig5": fig5_codes_clamp,          # cheap & exact first
     "kernel": kernel_microbench,
     "serve": serve_throughput,
+    "train": train_throughput,
     "fig4": fig4_grad_bias,
     "fig2": fig2_lr_sweep,
     "fig3": fig3_act_ln,

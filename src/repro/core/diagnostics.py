@@ -107,6 +107,11 @@ class SpikeDetector:
         spiked = False
         if not math.isfinite(loss):
             spiked = True
+        if grad_norm is not None and not math.isfinite(grad_norm):
+            # NaN/inf gradients can precede the loss blow-up by several
+            # steps (the loss is computed *before* the poisoned update
+            # lands) — flag immediately instead of dropping the sample.
+            spiked = True
         if self._losses:
             ref = min(self._losses[-self.window:])
             if loss > self.spike_factor * ref:

@@ -60,6 +60,28 @@ class QuantConfig:
                 f"ln={n(self.ln_fmt)} attn={int(self.attn)} "
                 f"scale={self.scale_mode}")
 
+    # ---- serialization (checkpoint meta round-trip) ------------------------
+    def to_dict(self) -> dict:
+        """JSON-able form; ``from_dict`` inverts it exactly.  Used by the
+        Trainer to persist the *active* precision scheme in checkpoint meta
+        so a resume cannot silently revert a mid-run intervention."""
+        n = lambda f: None if f is None else f.name
+        return {"w_fwd": n(self.w_fwd), "a_fwd": n(self.a_fwd),
+                "w_bwd": n(self.w_bwd), "g_bwd": n(self.g_bwd),
+                "a_bwd": n(self.a_bwd), "ln_fmt": n(self.ln_fmt),
+                "attn": self.attn, "block": self.block,
+                "scale_mode": self.scale_mode}
+
+    @staticmethod
+    def from_dict(d: dict) -> "QuantConfig":
+        g = lambda k: get_format(d[k]) if d.get(k) else None
+        return QuantConfig(w_fwd=g("w_fwd"), a_fwd=g("a_fwd"),
+                           w_bwd=g("w_bwd"), g_bwd=g("g_bwd"),
+                           a_bwd=g("a_bwd"), ln_fmt=g("ln_fmt"),
+                           attn=bool(d.get("attn", True)),
+                           block=int(d.get("block", MX_BLOCK)),
+                           scale_mode=d.get("scale_mode", "floor"))
+
     # ---- constructors (paper configurations) ------------------------------
     @staticmethod
     def bf16() -> "QuantConfig":

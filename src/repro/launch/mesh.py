@@ -11,9 +11,11 @@ mesh is built).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "mesh_from_flag"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -25,3 +27,23 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU runs)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_from_flag(flag: Optional[str]):
+    """Parse the launcher's ``--mesh data,model[,pod]`` flag.
+
+    "4,2" -> Mesh(data=4, model=2); "2,2,2" -> Mesh(pod=2, data=2, model=2)
+    with "pod" outermost (slowest-varying device order, matching the
+    physical slow inter-pod links).  Empty/None -> None (single device)."""
+    if not flag:
+        return None
+    try:
+        dims = tuple(int(x) for x in flag.split(","))
+    except ValueError as e:
+        raise ValueError(f"bad --mesh {flag!r}: {e}") from None
+    if len(dims) == 2:
+        return jax.make_mesh(dims, ("data", "model"))
+    if len(dims) == 3:
+        data, model, pod = dims
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    raise ValueError(f"--mesh wants 2 or 3 comma-separated ints, got {flag!r}")

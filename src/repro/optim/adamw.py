@@ -92,11 +92,8 @@ def adamw_update(grads, state, params, lr, cfg: AdamWConfig):
     new_state = {"m": m, "v": v, "count": count}
     if cfg.master:
         new_state["master"] = new_ref
-        new_params = jax.tree.map(
-            lambda nr, p: nr.astype(p.dtype), new_ref, params)
-    else:
-        new_params = jax.tree.map(
-            lambda nr, p: nr.astype(p.dtype), new_ref, params)
+    new_params = jax.tree.map(
+        lambda nr, p: nr.astype(p.dtype), new_ref, params)
     return new_params, new_state, {"grad_norm": gnorm}
 
 

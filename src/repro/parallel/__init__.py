@@ -1,7 +1,9 @@
 from .sharding import (batch_axes, batch_pspecs, cache_pspecs, param_pspecs,
                        param_shardings, shardings_like)
-from .compression import compressed_psum, compression_error
+from .compression import (compressed_psum, compression_error,
+                          compression_error_terms)
 
 __all__ = ["batch_axes", "batch_pspecs", "cache_pspecs", "param_pspecs",
            "param_shardings", "shardings_like", "compressed_psum",
-           "compression_error"]
+           "compression_error",
+           "compression_error_terms"]

@@ -8,9 +8,12 @@ quantization noise the paper characterizes — so the same clamp-fraction
 diagnostics apply to gradient blocks, and the same mitigations (e.g.
 switching the compressor off) hook into the intervention machinery.
 
-Implementation: grads are computed per-pod (batch sharded over "pod" ×
-"data" by GSPMD as usual *within* a shard_map over "pod"), quantized, then
-psum'd across the pod axis.  Quantize-then-sum ≠ sum-then-quantize: the
+Implementation (see train/loop.py): per-pod grads are computed in the
+GSPMD world — vmap over a pod-sharded stack axis, since XLA's
+partial-manual mode cannot partition the model's scan-over-layers — and
+only the elementwise exchange runs inside a shard_map over "pod":
+quantize, then psum across the pod axis.  Quantize-then-sum ≠
+sum-then-quantize: the
 estimator stays unbiased-per-term and the error is bounded by the per-block
 quantization step; we expose `compression_error()` so benchmarks can track
 it with the paper's ζ-norm methodology.
@@ -25,7 +28,12 @@ import jax.numpy as jnp
 
 from repro.core import ElementFormat, quantize_mx
 
-__all__ = ["compressed_psum", "compression_error"]
+__all__ = ["compressed_psum", "compression_error",
+           "compression_error_terms"]
+
+
+def _compressible(x) -> bool:
+    return x.ndim >= 1 and x.shape[-1] >= 2
 
 
 def compressed_psum(tree, axis_name: str, fmt: Optional[ElementFormat]):
@@ -33,19 +41,30 @@ def compressed_psum(tree, axis_name: str, fmt: Optional[ElementFormat]):
     leaf beforehand (``fmt=None`` = plain psum)."""
 
     def one(x):
-        if fmt is not None and x.ndim >= 1 and x.shape[-1] >= 2:
+        if fmt is not None and _compressible(x):
             x = quantize_mx(x, fmt, axis=-1)
         return jax.lax.psum(x, axis_name)
 
     return jax.tree.map(one, tree)
 
 
+def compression_error_terms(tree, fmt: ElementFormat):
+    """(squared error, squared norm) of compressing ``tree``.
+
+    Traceable (returns jnp scalars), so the training step can psum the two
+    terms across pods and surface sqrt(num/den) as a per-step metric without
+    a host round-trip; `compression_error` is the host-side convenience."""
+    num = jnp.zeros((), jnp.float32)
+    den = jnp.zeros((), jnp.float32)
+    for x in jax.tree.leaves(tree):
+        if _compressible(x):
+            xq = quantize_mx(x, fmt, axis=-1)
+            num += jnp.sum(jnp.square((xq - x).astype(jnp.float32)))
+        den += jnp.sum(jnp.square(x.astype(jnp.float32)))
+    return num, den
+
+
 def compression_error(tree, fmt: ElementFormat):
     """Relative L2 error introduced by compressing ``tree`` (host metric)."""
-    num, den = 0.0, 0.0
-    for x in jax.tree.leaves(tree):
-        if x.ndim >= 1 and x.shape[-1] >= 2:
-            xq = quantize_mx(x, fmt, axis=-1)
-            num += float(jnp.sum(jnp.square((xq - x).astype(jnp.float32))))
-        den += float(jnp.sum(jnp.square(x.astype(jnp.float32))))
-    return (num / max(den, 1e-30)) ** 0.5
+    num, den = compression_error_terms(tree, fmt)
+    return (float(num) / max(float(den), 1e-30)) ** 0.5

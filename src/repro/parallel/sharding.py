@@ -197,17 +197,42 @@ def shardings_like(pspec_tree, mesh: Mesh) -> Any:
 import contextlib
 import contextvars
 
-_ACT_MESH: contextvars.ContextVar[Optional[Mesh]] = \
+# (mesh, frozenset of manual axes) — manual axes are ones the caller has
+# already lowered to shard_map body scope (e.g. "pod" in the trainer's
+# cross-pod gradient loop): constraints emitted inside that region must
+# not mention them or GSPMD rejects the spec.
+_ACT_MESH: contextvars.ContextVar[Optional[tuple]] = \
     contextvars.ContextVar("act_mesh", default=None)
 
 
 @contextlib.contextmanager
-def activation_sharding(mesh: Mesh):
-    token = _ACT_MESH.set(mesh)
+def activation_sharding(mesh: Optional[Mesh], manual=()):
+    """``mesh=None`` disables constraints for the enclosed region (used
+    inside shard_map bodies, where XLA's partial-manual sharding rejects
+    or miscompiles with_sharding_constraint on several backends — GSPMD
+    propagation alone handles the auto axes there)."""
+    token = _ACT_MESH.set(None if mesh is None
+                          else (mesh, frozenset(manual)))
     try:
         yield
     finally:
         _ACT_MESH.reset(token)
+
+
+def _act_ctx():
+    v = _ACT_MESH.get()
+    return (None, frozenset()) if v is None else v
+
+
+def _visible_batch_axes(mesh: Mesh, manual: frozenset) -> tuple:
+    return tuple(a for a in batch_axes(mesh) if a not in manual)
+
+
+def _axes_size(mesh: Mesh, axes: tuple) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
 
 
 def shard_spec(x, spec_axes):
@@ -216,11 +241,17 @@ def shard_spec(x, spec_axes):
     ``spec_axes`` entries: "batch" -> the (pod, data) batch axes, any mesh
     axis name, or None.  Dims that do not divide fall back to replicated.
     Identity outside an activation_sharding context."""
-    mesh = _ACT_MESH.get()
+    mesh, manual = _act_ctx()
     if mesh is None:
         return x
-    ba = batch_axes(mesh)
-    spec = tuple(ba if a == "batch" else a for a in spec_axes)
+    ba = _visible_batch_axes(mesh, manual)
+
+    def vis(a):
+        axes = tuple(x for x in (a if isinstance(a, tuple) else (a,))
+                     if x is not None and x not in manual)
+        return axes[0] if len(axes) == 1 else (axes or None)
+
+    spec = tuple((ba or None) if a == "batch" else vis(a) for a in spec_axes)
     spec = _fit(spec, x.shape, mesh)
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(*spec)))
@@ -228,18 +259,18 @@ def shard_spec(x, spec_axes):
 
 def shard_act(x, feature_axis: Optional[str] = None):
     """Constrain an activation (B, T, ...) or (B, ...) tensor."""
-    mesh = _ACT_MESH.get()
+    mesh, manual = _act_ctx()
     if mesh is None or x.ndim < 2:
         return x
-    ba = batch_axes(mesh)
+    ba = _visible_batch_axes(mesh, manual)
     B = x.shape[0]
     tail = [None] * (x.ndim - 1)
-    if feature_axis is not None:
+    if feature_axis is not None and feature_axis not in manual:
         tail[-1] = feature_axis
-    if _batch_divisible(B, mesh):
+    if ba and B % _axes_size(mesh, ba) == 0:
         spec = P(ba, *tail)
     elif x.ndim >= 2 and x.shape[1] % mesh.shape["data"] == 0 \
-            and x.shape[1] > 1:
+            and x.shape[1] > 1 and "data" not in manual:
         spec = P(None, "data", *tail[1:])
     else:
         return x

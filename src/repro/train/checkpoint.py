@@ -78,8 +78,15 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore(ckpt_dir: str, template, step: Optional[int] = None
-            ) -> Tuple[Any, dict, int]:
+def restore(ckpt_dir: str, template, step: Optional[int] = None,
+            shardings: Any = None) -> Tuple[Any, dict, int]:
+    """Load a checkpoint into the structure of ``template``.
+
+    ``shardings``: optional pytree of `jax.sharding.Sharding` matching
+    ``template`` — each restored leaf is `jax.device_put` onto it, so the
+    same (logically unsharded) checkpoint lands correctly on any mesh
+    shape/device count (elastic restore).  With ``shardings=None`` leaves
+    stay host-side numpy, as before."""
     step = latest_step(ckpt_dir) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
@@ -91,7 +98,10 @@ def restore(ckpt_dir: str, template, step: Optional[int] = None
     if os.path.exists(meta_path):
         with open(meta_path) as f:
             meta = json.load(f)
-    return _unflatten_like(template, data), meta, step
+    tree = _unflatten_like(template, data)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree, meta, step
 
 
 class Checkpointer:
@@ -110,7 +120,10 @@ class Checkpointer:
 
     def save(self, step: int, tree, meta: Optional[dict] = None):
         self.wait()
-        host_tree = jax.tree.map(np.asarray, tree)   # device->host sync here
+        # Gather-on-save: device_get assembles each (possibly sharded)
+        # array into one host buffer, so the npz is logically unsharded and
+        # restores onto any mesh shape.  This is the device->host sync.
+        host_tree = jax.tree.map(np.asarray, jax.device_get(tree))
 
         def _write():
             save(self.dir, step, host_tree, meta)

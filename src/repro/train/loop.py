@@ -1,4 +1,4 @@
-"""Fault-tolerant training loop with paper-driven instability recovery.
+"""Fault-tolerant distributed training loop with paper-driven recovery.
 
 The paper shows (Fig. 7) that an impending MX divergence can be averted by
 switching the precision scheme mid-training *before* the loss blows up.
@@ -10,26 +10,52 @@ This loop operationalizes that as a fault-tolerance policy:
      paper's strongest immediate stabilizer) — this swaps the static
      QuantConfig, recompiling the step function, and training resumes
      from the rollback step with the identical data stream (step-indexed
-     batches make the replay exact);
-  4. events are recorded for the run report.
+     batches make the replay exact).  Without a checkpointer the
+     intervention still applies (forward fix, no rollback);
+  4. after ``max_recoveries`` the run *aborts* with a terminal
+     ``recovery_exhausted`` event — a deterministic spike must never
+     replay forever (restore -> same data -> same spike -> restore);
+  5. events are recorded for the run report.
+
+Distribution: pass ``mesh`` to run sharded.  Parameters and optimizer
+state shard FSDP+TP per `parallel.sharding.param_pspecs`, batches shard
+over the ("pod", "data") axes, and the jitted step carries explicit
+in/out shardings so placement never depends on GSPMD guessing.  With a
+"pod" axis the gradient exchange across the slow inter-pod links runs
+inside a `shard_map` over "pod" and goes through `compressed_psum`
+(optionally MX-compressed, `TrainerConfig.pod_compression`), surfacing
+the paper's ζ-norm-style `compression_error` as a per-step metric.
+``grad_accum > 1`` splits each global batch into sequential microbatches
+with fp32 accumulation (same loss, k× smaller activation working set).
 
 Node-failure recovery falls out of the same machinery: restart the binary,
-`Trainer.restore()` picks the newest complete checkpoint and the data
-pipeline fast-forwards by step index (elastic across device counts since
-checkpoints are logically unsharded).  A step-time monitor flags straggler
-steps (>k× rolling median).
+`Trainer.restore()` picks the newest complete checkpoint — adopting the
+checkpoint's *recorded* QuantConfig and recovery count, so a resume never
+silently reverts a mid-run intervention — and the data pipeline
+fast-forwards by step index (elastic across mesh shapes since checkpoints
+are logically unsharded).  A step-time monitor flags straggler steps.
+
+Host sync discipline: step metrics stay on device; the loop drains them
+(one blocking transfer per window) only at ``log_every``/checkpoint
+boundaries, feeding the watchdog every step of the window in order.
+Checkpoints are written only after their window drains clean, so a
+rollback target is never contaminated by an undetected spike.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core import (QuantConfig, SpikeDetector, apply_intervention,
-                        fused_gemms_enabled)
+                        fused_gemms_enabled, get_format)
 from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
 
 __all__ = ["TrainerConfig", "Trainer", "make_train_step"]
@@ -53,46 +79,189 @@ class TrainerConfig:
     # straggler monitor
     straggler_factor: float = 3.0
     log_every: int = 50
+    # distribution
+    grad_accum: int = 1                      # microbatches per step
+    pod_compression: Optional[str] = None    # e.g. "e4m3": MX cross-pod grads
+
+
+def _microbatched(batch, n: int, what: str = "grad_accum"):
+    """(B, ...) leaves -> (n, B//n, ...); scalars broadcast.  Used both for
+    sequential microbatch accumulation and for the per-pod gradient stack."""
+    def one(x):
+        if x.ndim == 0:
+            return jnp.broadcast_to(x, (n,))
+        if x.shape[0] % n:
+            raise ValueError(
+                f"{what}={n} does not divide batch dim {x.shape[0]}")
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    return jax.tree.map(one, batch)
 
 
 def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig,
-                    tcfg: TrainerConfig):
+                    tcfg: TrainerConfig, mesh=None, param_specs=None,
+                    opt_specs=None, batch_specs=None):
     """loss_fn(params, batch, qcfg) -> (loss, metrics).  Returns a function
     (params, opt_state, batch, step, qcfg[static]) -> (params, opt_state,
-    metrics), jitted with qcfg static so interventions recompile cleanly."""
+    metrics), jitted with qcfg static so interventions recompile cleanly.
+
+    With ``mesh`` the step is jitted with explicit in/out shardings built
+    from the given PartitionSpec trees; a "pod" mesh axis additionally
+    routes the cross-pod gradient all-reduce through `compressed_psum`
+    inside a shard_map over "pod" (data/model stay auto/GSPMD)."""
+    accum = max(1, tcfg.grad_accum)
+    pod = mesh is not None and "pod" in mesh.axis_names
+    fmt = get_format(tcfg.pod_compression) if tcfg.pod_compression else None
+    if fmt is not None and not pod:
+        raise ValueError(
+            "pod_compression is set but the mesh has no 'pod' axis — the "
+            "compressed gradient exchange would silently not run; use a "
+            "3-dim mesh (--mesh data,model,pod) or unset pod_compression")
+
+    def grads_of(params, batch, qcfg):
+        vg = jax.value_and_grad(loss_fn, has_aux=True)
+        if accum == 1:
+            (loss, metrics), grads = vg(params, batch, qcfg)
+            return loss, dict(metrics), grads
+        mb = _microbatched(batch, accum)
+        first = jax.tree.map(lambda x: x[0], mb)
+        rest = jax.tree.map(lambda x: x[1:], mb)
+        (l0, m0), g0 = vg(params, first, qcfg)
+
+        def acc(carry, b):
+            (loss, metrics), grads = vg(params, b, qcfg)
+            return jax.tree.map(
+                lambda c, x: c + x.astype(jnp.float32) / accum, carry,
+                (loss, dict(metrics), grads)), None
+
+        carry0 = jax.tree.map(lambda x: x.astype(jnp.float32) / accum,
+                              (l0, dict(m0), g0))
+        (loss, metrics, grads), _ = jax.lax.scan(acc, carry0, rest)
+        return loss, metrics, grads
+
+    if pod:
+        from repro.parallel import compressed_psum, compression_error_terms
+        npod = mesh.shape["pod"]
+        auto = frozenset(a for a in mesh.axis_names if a != "pod")
+        try:
+            from jax import shard_map  # jax >= 0.5
+        except ImportError:
+            from jax.experimental.shard_map import shard_map
+
+        def exchange(gs):
+            # shard_map body, manual over "pod" only: each pod holds its
+            # local mean gradient (leading stack axis of size 1 here).
+            # Quantize-then-sum across the slow axis (see parallel/
+            # compression.py for why this order keeps the error bounded).
+            gs = jax.tree.map(lambda x: jnp.squeeze(x, 0), gs)
+            err = jnp.zeros((), jnp.float32)
+            if fmt is not None:
+                num, den = compression_error_terms(gs, fmt)
+                err = jnp.sqrt(jax.lax.psum(num, "pod")
+                               / jnp.maximum(jax.lax.psum(den, "pod"),
+                                             1e-30))
+            gs = compressed_psum(gs, "pod", fmt)
+            return jax.tree.map(lambda x: x / npod, gs), err
+
+        def fwd_bwd(params, batch, qcfg):
+            # Per-pod gradients via vmap over a pod-sharded stack axis:
+            # the model itself stays in the GSPMD (auto) world — XLA's
+            # partial-manual mode cannot partition scan-over-layers — and
+            # only the elementwise quantize+psum exchange runs manual.
+            mb = _microbatched(batch, npod, what="pod")
+            # Inside the per-pod region, activation constraints must not
+            # pin batch dims to "pod" (each vmap lane is one pod's shard);
+            # re-enter the context with "pod" excluded so shard_act uses
+            # only the data axis and the compressed psum below stays the
+            # only cross-pod traffic.
+            from repro.parallel.sharding import activation_sharding
+
+            def pod_grads(b):
+                with activation_sharding(mesh, manual=("pod",)):
+                    return grads_of(params, b, qcfg)
+
+            loss, metrics, grads = jax.vmap(pod_grads)(mb)
+            # Pin each pod's gradient replica to its pod so the exchange
+            # is the only cross-pod traffic.
+            specs = jax.tree.flatten(
+                param_specs, is_leaf=lambda x: isinstance(x, P))[0]
+            flat, tdef = jax.tree.flatten(grads)
+            grads = tdef.unflatten([
+                jax.lax.with_sharding_constraint(
+                    g, NamedSharding(mesh, P("pod", *s)))
+                for g, s in zip(flat, specs)])
+            f = shard_map(exchange, mesh=mesh, in_specs=(P("pod"),),
+                          out_specs=(P(), P()), check_rep=False, auto=auto)
+            grads, err = f(grads)
+            loss = jnp.mean(loss)
+            metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics)
+            if fmt is not None:
+                metrics["compression_error"] = err
+            return loss, metrics, grads
+    else:
+        fwd_bwd = grads_of
 
     def step_fn(params, opt_state, batch, step, qcfg: QuantConfig):
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, batch, qcfg)
+        loss, metrics, grads = fwd_bwd(params, batch, qcfg)
         lr = warmup_cosine(step, tcfg.total_steps, tcfg.peak_lr, tcfg.init_lr,
                            tcfg.end_lr, tcfg.warmup_frac)
         params, opt_state, om = adamw_update(grads, opt_state, params, lr,
                                              opt_cfg)
-        metrics = dict(metrics)
         metrics.update(om)
         metrics["lr"] = lr
         metrics["loss"] = loss
         return params, opt_state, metrics
 
-    return jax.jit(step_fn, static_argnums=(4,), donate_argnums=(0, 1))
+    if mesh is None:
+        return jax.jit(step_fn, static_argnums=(4,), donate_argnums=(0, 1))
+    like = lambda specs: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+    rep = NamedSharding(mesh, P())
+    return jax.jit(step_fn, static_argnums=(4,), donate_argnums=(0, 1),
+                   in_shardings=(like(param_specs), like(opt_specs),
+                                 like(batch_specs), rep),
+                   out_shardings=(like(param_specs), like(opt_specs), rep))
 
 
 class Trainer:
     def __init__(self, loss_fn, params, qcfg: QuantConfig,
                  batch_fn: Callable[[int], Any],
                  opt_cfg: Optional[AdamWConfig] = None,
-                 tcfg: Optional[TrainerConfig] = None):
+                 tcfg: Optional[TrainerConfig] = None,
+                 mesh=None):
         self.tcfg = tcfg or TrainerConfig()
         self.opt_cfg = opt_cfg or AdamWConfig()
         self.loss_fn = loss_fn
         self.batch_fn = batch_fn
         self.qcfg = qcfg
+        self.mesh = mesh
         self.params = params
         self.opt_state = adamw_init(params, self.opt_cfg)
         self.step = 0
         self.detector = SpikeDetector(self.tcfg.spike_factor,
                                       self.tcfg.grad_factor)
-        self._step_fn = make_train_step(loss_fn, self.opt_cfg, self.tcfg)
+        self._pspecs = self._ospecs = self._bspecs = None
+        self._bshard = None
+        if mesh is not None:
+            from repro.parallel import (batch_pspecs, param_pspecs,
+                                        shardings_like)
+            self._pspecs = param_pspecs(self.params, mesh)
+            self._ospecs = param_pspecs(self.opt_state, mesh)
+            try:
+                # only the shapes matter; don't materialize (or fetch) a
+                # real batch just to derive PartitionSpecs
+                batch0 = jax.eval_shape(batch_fn, 0)
+            except Exception:   # batch_fn not traceable (I/O, host code)
+                batch0 = batch_fn(0)
+            self._bspecs = batch_pspecs(batch0, mesh)
+            self._bshard = shardings_like(self._bspecs, mesh)
+            self.params = jax.device_put(
+                self.params, shardings_like(self._pspecs, mesh))
+            self.opt_state = jax.device_put(
+                self.opt_state, shardings_like(self._ospecs, mesh))
+        self._step_fn = make_train_step(loss_fn, self.opt_cfg, self.tcfg,
+                                        mesh, self._pspecs, self._ospecs,
+                                        self._bspecs)
         self.history: List[Dict[str, float]] = []
         self.events: List[Dict[str, Any]] = []
         self._ckptr = None
@@ -108,31 +277,75 @@ class Trainer:
     def _tree(self):
         return {"params": self.params, "opt": self.opt_state}
 
+    def _tree_shardings(self):
+        if self.mesh is None:
+            return None
+        from repro.parallel import shardings_like
+        return {"params": shardings_like(self._pspecs, self.mesh),
+                "opt": shardings_like(self._ospecs, self.mesh)}
+
     def checkpoint(self):
         if self._ckptr:
             self._ckptr.save(self.step, self._tree(),
                              {"step": self.step,
-                              "qcfg": self.qcfg.describe()})
+                              "qcfg": self.qcfg.describe(),
+                              "qcfg_dict": self.qcfg.to_dict(),
+                              "recoveries": self._recoveries})
 
-    def restore(self, step: Optional[int] = None) -> bool:
+    def restore(self, step: Optional[int] = None,
+                adopt_meta: bool = True) -> bool:
+        """Load the newest (or given) checkpoint onto the current mesh.
+
+        ``adopt_meta=True`` (resume semantics) also restores the recorded
+        QuantConfig and recovery count, warning if the recorded precision
+        differs from the live one — otherwise a resume after a mid-run
+        intervention would silently train in the pre-intervention format
+        (the exact failure the Fig. 7 interventions exist to prevent).
+        In-run rollback (`_recover`) passes ``adopt_meta=False``: there the
+        in-memory qcfg *is* the intervention and must survive the restore.
+        """
         if not self._ckptr:
             return False
-        from .checkpoint import restore, latest_step
+        from .checkpoint import latest_step, restore
         self._ckptr.wait()
         s = latest_step(self.tcfg.ckpt_dir) if step is None else step
         if s is None:
             return False
-        tree, meta, s = restore(self.tcfg.ckpt_dir, self._tree(), s)
+        tree, meta, s = restore(self.tcfg.ckpt_dir, self._tree(), s,
+                                shardings=self._tree_shardings())
         self.params, self.opt_state = tree["params"], tree["opt"]
         self.step = s
+        if adopt_meta and meta:
+            self._recoveries = int(meta.get("recoveries", self._recoveries))
+            saved = meta.get("qcfg_dict")
+            if saved is not None:
+                saved_qcfg = QuantConfig.from_dict(saved)
+                if saved_qcfg != self.qcfg:
+                    warnings.warn(
+                        f"checkpoint step {s} was written with qcfg "
+                        f"[{saved_qcfg.describe()}] but the trainer was "
+                        f"constructed with [{self.qcfg.describe()}]; "
+                        "adopting the checkpoint's qcfg (mid-run "
+                        "intervention preserved)")
+                    self.events.append({
+                        "step": s, "event": "qcfg_restored",
+                        "from_qcfg": self.qcfg.describe(),
+                        "to_qcfg": saved_qcfg.describe()})
+                    self.qcfg = saved_qcfg
         return True
 
     # ---- recovery policy --------------------------------------------------
-    def _recover(self, reason: str):
-        rolled = self.restore()
+    def _recover(self, reason: str) -> bool:
+        """Roll back (if possible) + intervene.  Returns whether a rollback
+        actually happened — without one the post-spike steps remain applied
+        and their metrics must still be accounted for by the caller."""
+        # adopt_meta=False: rollback must keep the in-memory qcfg — the
+        # intervention applied below is the whole point of the recovery.
+        rolled = self.restore(adopt_meta=False)
         old = self.qcfg.describe()
-        if (self.tcfg.auto_intervention
-                and self._recoveries < self.tcfg.max_recoveries):
+        if self.tcfg.auto_intervention:
+            # Applied even with no checkpointer: a forward-fix (precision
+            # switch without rollback) still stabilizes per Fig. 7.
             self.qcfg = apply_intervention(self.qcfg,
                                            self.tcfg.auto_intervention)
         self._recoveries += 1
@@ -142,6 +355,34 @@ class Trainer:
             "step": self.step, "event": "recovery", "reason": reason,
             "rolled_back": rolled, "from_qcfg": old,
             "to_qcfg": self.qcfg.describe()})
+        return rolled
+
+    # ---- metric window ----------------------------------------------------
+    def _drain(self, pending) -> tuple:
+        """Record a window of (step, metrics, time_s) entries: append
+        history, feed the watchdog per step in order.  Stops at the first
+        spike; returns (spike reason or None, entries consumed) so the
+        caller can decide what the tail means (rollback invalidates it,
+        a forward-fix does not)."""
+        for i, (s, metrics, dt) in enumerate(pending):
+            loss = float(metrics["loss"])
+            gnorm = float(metrics["grad_norm"])
+            self._step_times.append(dt)
+            win = self._step_times[-64:]
+            med = sorted(win)[len(win) // 2]
+            rec = {"step": s, "loss": loss, "grad_norm": gnorm,
+                   "lr": float(metrics["lr"]), "time_s": dt}
+            if "compression_error" in metrics:
+                rec["compression_error"] = float(
+                    metrics["compression_error"])
+            if dt > self.tcfg.straggler_factor * med and len(
+                    self._step_times) > 8:
+                self.events.append({"step": s, "event": "straggler",
+                                    "time_s": dt, "median_s": med})
+            self.history.append(rec)
+            if self.detector.update(loss, gnorm):
+                return f"spike@step{s}: loss={loss:.4g}", i + 1
+        return None, len(pending)
 
     # ---- main loop ---------------------------------------------------------
     def run(self, n_steps: Optional[int] = None):
@@ -154,35 +395,74 @@ class Trainer:
         if not self.events or self.events[-1].get("event") != "run_start":
             self.events.append({"step": self.step, "event": "run_start",
                                 "fused_gemms": self._fused_gemms,
+                                "mesh": dict(self.mesh.shape)
+                                if self.mesh is not None else None,
                                 "qcfg": self.qcfg.describe()})
-        end = self.step + (n_steps or self.tcfg.total_steps)
-        while self.step < end:
-            t0 = time.monotonic()
-            batch = self.batch_fn(self.step)
-            self.params, self.opt_state, metrics = self._step_fn(
-                self.params, self.opt_state, batch,
-                jnp.asarray(self.step), self.qcfg)
-            loss = float(metrics["loss"])
-            gnorm = float(metrics["grad_norm"])
-            dt = time.monotonic() - t0
-            self._step_times.append(dt)
-            med = sorted(self._step_times[-64:])[
-                len(self._step_times[-64:]) // 2]
-            rec = {"step": self.step, "loss": loss, "grad_norm": gnorm,
-                   "lr": float(metrics["lr"]), "time_s": dt}
-            if dt > self.tcfg.straggler_factor * med and len(
-                    self._step_times) > 8:
-                self.events.append({"step": self.step, "event": "straggler",
-                                    "time_s": dt, "median_s": med})
-            self.history.append(rec)
-            spiked = self.detector.update(loss, gnorm)
-            if spiked and self._ckptr:
-                self._recover(f"spike@step{self.step}: loss={loss:.4g}")
-                continue
-            self.step += 1
-            if self._ckptr and self.step % self.tcfg.ckpt_every == 0:
-                self.checkpoint()
+        # n_steps=0 must mean "nothing to do" (e.g. --resume of a finished
+        # run), not "default to total_steps"
+        end = self.step + (self.tcfg.total_steps if n_steps is None
+                           else n_steps)
+        log_every = max(self.tcfg.log_every, 1)
+        pending: List[tuple] = []
+        aborted = False
+        with contextlib.ExitStack() as ctx:
+            if self.mesh is not None:
+                from repro.parallel.sharding import activation_sharding
+                ctx.enter_context(self.mesh)
+                ctx.enter_context(activation_sharding(self.mesh))
+            win_t0 = time.monotonic()
+            while self.step < end:
+                batch = self.batch_fn(self.step)
+                if self._bshard is not None:
+                    batch = jax.device_put(batch, self._bshard)
+                self.params, self.opt_state, metrics = self._step_fn(
+                    self.params, self.opt_state, batch,
+                    jnp.asarray(self.step), self.qcfg)
+                pending.append((self.step, metrics))
+                self.step += 1
+                at_ckpt = bool(self._ckptr) \
+                    and self.step % self.tcfg.ckpt_every == 0
+                if not (at_ckpt or self.step >= end
+                        or self.step % log_every == 0):
+                    continue
+                # One host sync per window.  Steps chain through params, so
+                # the last metric being ready means the window finished;
+                # per-step time_s is the window wall time amortized (exact
+                # step latency when log_every == 1).
+                jax.block_until_ready(pending[-1][1]["loss"])
+                per = (time.monotonic() - win_t0) / len(pending)
+                pending = [(s, m, per) for s, m in pending]
+                recovered = False
+                while pending:
+                    spike, consumed = self._drain(pending)
+                    pending = pending[consumed:]
+                    if spike is None:
+                        break
+                    if self._recoveries >= self.tcfg.max_recoveries:
+                        # Terminal: rolling back yet again would replay the
+                        # identical data into the identical state — a
+                        # livelock, not a recovery.  Abort instead.
+                        self.events.append({
+                            "step": self.step, "event": "recovery_exhausted",
+                            "reason": spike,
+                            "recoveries": self._recoveries})
+                        aborted = True
+                        break
+                    recovered = True
+                    if self._recover(spike):
+                        # rolled back: the tail was computed from a state
+                        # that no longer exists — drop it
+                        pending = []
+                    # no rollback (forward-fix): the tail's updates remain
+                    # applied, so keep draining it into history/watchdog
+                pending = []
+                win_t0 = time.monotonic()
+                if aborted:
+                    break
+                if at_ckpt and not recovered:
+                    self.checkpoint()
         if self._ckptr:
-            self.checkpoint()
+            if not aborted:
+                self.checkpoint()
             self._ckptr.wait()
         return self.history

@@ -203,6 +203,163 @@ def test_recovery_end_to_end_through_run_loop(tmp_path):
     assert sum(l > 1e4 for l in losses) == 1    # exactly the poisoned step
 
 
+def test_recovery_livelock_aborts_after_max_recoveries(tmp_path):
+    """Regression: a *persistent* deterministic spike (same step index
+    poisons every replay) used to livelock — rollback restored the same
+    data, hit the same spike, rolled back again, forever, because
+    max_recoveries capped only the intervention.  The run must now abort
+    with a terminal `recovery_exhausted` event after max_recoveries."""
+    cfg = get_config("olmo-paper", "smoke")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+
+    def batch_fn(step):
+        b = dict(lm_input_arrays(step, cfg, 4, 32))
+        # poison step 12 on *every* encounter: rollback replays it
+        b["poison"] = jnp.float32(1e6 if step == 12 else 1.0)
+        return b
+
+    def loss_fn(p, b, q):
+        loss, m = lm_loss(p, {k: v for k, v in b.items() if k != "poison"},
+                          cfg, q)
+        return loss * b["poison"], m
+
+    tcfg = TrainerConfig(total_steps=25, ckpt_dir=str(tmp_path),
+                         ckpt_every=5, peak_lr=1e-3, spike_factor=5.0,
+                         log_every=1, max_recoveries=2,
+                         auto_intervention="bf16_activations")
+    tr = Trainer(loss_fn, params, preset("mxfp8_e4m3"), batch_fn, tcfg=tcfg)
+    tr.run(25)                                  # must terminate
+
+    recs = [e for e in tr.events if e["event"] == "recovery"]
+    assert len(recs) == 2                       # capped, then aborted
+    assert tr.events[-1]["event"] == "recovery_exhausted"
+    assert tr.events[-1]["recoveries"] == 2
+    assert "spike@step12" in tr.events[-1]["reason"]
+    assert tr.step < 25                         # aborted, not completed
+
+
+def test_intervention_applies_without_checkpointer():
+    """Regression: `spiked and self._ckptr` silently skipped the precision
+    intervention entirely when no checkpointer was configured.  Without a
+    checkpoint there is nothing to roll back to, but the forward-fix
+    (precision switch) must still apply."""
+    cfg = get_config("olmo-paper", "smoke")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    armed = {"spike": True}
+
+    def batch_fn(step):
+        b = dict(lm_input_arrays(step, cfg, 4, 32))
+        poison = 1e6 if (step == 5 and armed.pop("spike", False)) else 1.0
+        b["poison"] = jnp.float32(poison)
+        return b
+
+    def loss_fn(p, b, q):
+        loss, m = lm_loss(p, {k: v for k, v in b.items() if k != "poison"},
+                          cfg, q)
+        return loss * b["poison"], m
+
+    tcfg = TrainerConfig(total_steps=10, ckpt_dir=None, peak_lr=1e-3,
+                         spike_factor=5.0, log_every=1,
+                         auto_intervention="bf16_activations")
+    tr = Trainer(loss_fn, params, preset("mxfp8_e4m3"), batch_fn, tcfg=tcfg)
+    tr.run(10)
+    recs = [e for e in tr.events if e["event"] == "recovery"]
+    assert len(recs) == 1
+    assert recs[0]["rolled_back"] is False      # nothing to restore
+    assert tr.qcfg.a_fwd is None                # intervention applied
+    assert tr.step == 10                        # run completed
+
+
+def test_qcfg_and_recoveries_survive_resume(tmp_path):
+    """Regression: checkpoint meta recorded qcfg.describe() but restore()
+    ignored it, so a --resume after a mid-run precision intervention
+    silently trained in the pre-intervention format."""
+    t1, _ = _tiny_trainer(tmp_path)
+    t1.run(6)
+    assert t1.detector.update(1e9, None)        # injected spike
+    t1._recover("test-injected")
+    assert t1.qcfg.a_fwd is None                # intervention landed
+    t1.checkpoint()
+    t1._ckptr.wait()
+
+    t2, _ = _tiny_trainer(tmp_path)             # fresh CLI-style trainer
+    assert t2.qcfg.a_fwd is not None            # constructed pre-intervention
+    with pytest.warns(UserWarning, match="qcfg"):
+        assert t2.restore()
+    assert t2.qcfg == t1.qcfg                   # intervention preserved
+    assert t2._recoveries == 1
+    assert any(e["event"] == "qcfg_restored" for e in t2.events)
+    # rollback inside _recover must NOT adopt meta (in-memory qcfg wins)
+    t2.qcfg = preset("mxfp8_e4m3")
+    assert t2.restore(adopt_meta=False)
+    assert t2.qcfg == preset("mxfp8_e4m3")
+
+
+def test_spike_detector_flags_nonfinite_grad_norm():
+    """Regression: NaN/inf grad_norm with finite loss was never flagged
+    (and was silently dropped from history)."""
+    from repro.core import SpikeDetector
+    det = SpikeDetector(spike_factor=100.0, grad_factor=50.0)
+    for _ in range(4):
+        assert not det.update(1.0, 1.0)
+    assert det.update(1.0, float("nan"))
+    assert det.update(1.0, float("inf"))
+    assert not det.update(1.0, 1.0)             # recovers on finite input
+    # flags even with no history at all
+    assert SpikeDetector().update(1.0, float("nan"))
+
+
+def test_grad_accum_matches_full_batch():
+    """grad_accum=k (sequential microbatches, fp32 accumulation) must give
+    the same optimization trajectory as the full batch."""
+    cfg = get_config("olmo-paper", "smoke")
+
+    def make(accum):
+        params = lm_init(jax.random.PRNGKey(0), cfg)
+        tcfg = TrainerConfig(total_steps=3, peak_lr=1e-3, log_every=1,
+                             grad_accum=accum)
+        return Trainer(lambda p, b, q: lm_loss(p, b, cfg, q), params,
+                       preset("bf16"),
+                       lambda s: lm_input_arrays(s, cfg, 8, 32), tcfg=tcfg)
+
+    t1, t4 = make(1), make(4)
+    h1, h4 = t1.run(3), t4.run(3)
+    np.testing.assert_allclose([r["loss"] for r in h1],
+                               [r["loss"] for r in h4], rtol=2e-4)
+    for a, b in zip(jax.tree.leaves(t1.params), jax.tree.leaves(t4.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-2)
+
+
+def test_run_zero_steps_is_noop():
+    """Regression: `run(0)` used to fall through `n_steps or total_steps`
+    and train a full extra total_steps — so a --resume of an already
+    finished run re-trained past its schedule instead of exiting."""
+    cfg = get_config("olmo-paper", "smoke")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    tcfg = TrainerConfig(total_steps=2, log_every=1)
+    tr = Trainer(lambda p, b, q: lm_loss(p, b, cfg, q), params,
+                 preset("bf16"), lambda s: lm_input_arrays(s, cfg, 2, 16),
+                 tcfg=tcfg)
+    assert tr.run(0) == [] and tr.step == 0
+    assert len(tr.run()) == 2 and tr.step == 2   # None -> total_steps
+
+
+def test_log_every_windows_keep_full_history():
+    """Metrics sync only at log_every boundaries (plus checkpoint/end),
+    but the per-step history and watchdog coverage stay complete."""
+    cfg = get_config("olmo-paper", "smoke")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    tcfg = TrainerConfig(total_steps=7, peak_lr=1e-3, log_every=3)
+    tr = Trainer(lambda p, b, q: lm_loss(p, b, cfg, q), params,
+                 preset("bf16"), lambda s: lm_input_arrays(s, cfg, 4, 32),
+                 tcfg=tcfg)
+    hist = tr.run(7)                 # drains at 3, 6, and end
+    assert [r["step"] for r in hist] == list(range(7))
+    assert all(np.isfinite(r["loss"]) for r in hist)
+    assert len(tr.detector._losses) == 7
+
+
 def test_grad_bias_probe_on_lm():
     from repro.core import grad_bias_probe
     cfg = get_config("olmo-paper", "smoke")
