@@ -3,48 +3,22 @@
 Paper claims: SGD variants are more stable than Adam in low precision
 (second-moment accumulation amplifies quantization bias); lower-gain
 Xavier init reduces spikes.  Neither removes the underlying gradient bias.
+
+Now two declarative specs over the sweep engine (optimizer is jit-static,
+so each optimizer cell is its own pack; the init axis likewise).
 """
 from __future__ import annotations
 
-import time
+from repro.sweep import run_sweep
+from repro.sweep.presets import fig10_specs
 
-import jax
-
-from repro.core import preset
-from repro.models import (ProxyConfig, proxy_batch, proxy_init, proxy_loss,
-                          teacher_init)
-from .common import Row, spike_count, train_simple
+from .common import Row
 
 
 def run(budget: str = "quick"):
-    steps = 120 if budget == "quick" else 500
     rows = []
-    cfg = ProxyConfig(d_model=128, n_layers=4, batch_size=256)
-    teacher = teacher_init(jax.random.PRNGKey(1), cfg)
-    # optimizer ablation (paper uses a larger LR here, 1e-2)
-    for opt, lr in (("adam", 2e-3), ("sgd", 1e-2), ("momentum", 1e-2)):
-        student = proxy_init(jax.random.PRNGKey(0), cfg)
-        t0 = time.perf_counter()
-        hist = train_simple(
-            lambda p, b, q: proxy_loss(p, b, cfg, q), student,
-            lambda s: proxy_batch(s, teacher, cfg), preset("mxfp4_e2m1"),
-            steps, lr=lr, optimizer=opt)
-        us = (time.perf_counter() - t0) / steps * 1e6
-        rows.append(Row(f"fig10.opt.{opt}", us,
-                        f"spikes={spike_count(hist['loss'], 10.0)} "
-                        f"final={hist['loss'][-1]:.4g}"))
-    # init ablation
-    for init in ("kaiming_uniform", "xavier_lowgain"):
-        icfg = ProxyConfig(d_model=128, n_layers=4, batch_size=256,
-                           init=init)
-        student = proxy_init(jax.random.PRNGKey(0), icfg)
-        t0 = time.perf_counter()
-        hist = train_simple(
-            lambda p, b, q: proxy_loss(p, b, icfg, q), student,
-            lambda s: proxy_batch(s, teacher, icfg), preset("mxfp4_e2m1"),
-            steps, lr=2e-3)
-        us = (time.perf_counter() - t0) / steps * 1e6
-        rows.append(Row(f"fig10.init.{init}", us,
-                        f"spikes={spike_count(hist['loss'], 10.0)} "
-                        f"final={hist['loss'][-1]:.4g}"))
+    for spec in fig10_specs(budget):
+        for r in run_sweep(spec):
+            rows.append(Row(r.label, r.us_per_step,
+                            f"spikes={r.spikes} final={r.final_loss:.4g}"))
     return rows

@@ -5,39 +5,22 @@ persist longer in low precision as LR grows.  CPU scale: reduced width,
 FP6/FP4 formats amplify the quantization bias so the ordering shows at
 ~200-step budgets (documented deviation; same protocol otherwise:
 identical seeds/batch order across precisions).
+
+Now a declarative spec over the vectorized sweep engine: the LR axis packs
+into vmapped lanes per scheme (per-lane peak LR through the shared
+schedule), so the grid costs ~one run per precision.
 """
 from __future__ import annotations
 
-import jax
+from repro.sweep import run_sweep
+from repro.sweep.presets import fig2_spec
 
-from repro.core import preset
-from repro.models import (ProxyConfig, proxy_batch, proxy_init, proxy_loss,
-                          teacher_init)
-from .common import Row, spike_count, time_fn, train_simple
-
-PRECISIONS = ["bf16", "mxfp8_e4m3", "mxfp6_e2m3", "mxfp4_e2m1"]
+from .common import Row
 
 
 def run(budget: str = "quick"):
-    steps = 150 if budget == "quick" else 600
-    lrs = [1e-4, 5e-4, 2e-3] if budget == "quick" else \
-        [1e-5, 5e-5, 1e-4, 5e-4, 1e-3, 2e-3]
-    cfg = ProxyConfig(d_model=128, n_layers=4, batch_size=256)
-    teacher = teacher_init(jax.random.PRNGKey(1), cfg)
-    rows = []
-    for lr in lrs:
-        for prec in PRECISIONS:
-            qcfg = preset(prec) if prec != "bf16" else preset("bf16")
-            student = proxy_init(jax.random.PRNGKey(0), cfg)
-            import time
-            t0 = time.perf_counter()
-            hist = train_simple(
-                lambda p, b, q: proxy_loss(p, b, cfg, q), student,
-                lambda s: proxy_batch(s, teacher, cfg), qcfg, steps, lr=lr)
-            us = (time.perf_counter() - t0) / steps * 1e6
-            spikes = spike_count(hist["loss"], factor=10.0)
-            final = hist["loss"][-1]
-            rows.append(Row(f"fig2.lr{lr:g}.{prec}", us,
-                            f"final_loss={final:.4g} spikes={spikes} "
-                            f"max_gnorm={max(hist['grad_norm']):.3g}"))
-    return rows
+    rep = run_sweep(fig2_spec(budget))
+    return [Row(r.label, r.us_per_step,
+                f"final_loss={r.final_loss:.4g} spikes={r.spikes} "
+                f"max_gnorm={r.max_gnorm:.3g}")
+            for r in rep]

@@ -3,52 +3,25 @@ forward-only quantization vs high-precision activations vs FP32 skyline.
 
 Paper claim: both mitigations cut divergent runs vs the fully quantized
 baseline.  We sweep seeds and report divergence/spike counts per scheme.
+
+Now a declarative spec over the vectorized sweep engine
+(``repro.sweep.presets.fig6_spec``): all seeds of a scheme run as vmapped
+lanes of one scan instead of a sequential python loop.
 """
 from __future__ import annotations
 
-import jax
-import numpy as np
+from repro.sweep import aggregate, run_sweep
+from repro.sweep.presets import fig6_spec
 
-from repro.core import QuantConfig, preset
-from repro.models import (ProxyConfig, proxy_batch, proxy_init, proxy_loss,
-                          teacher_init)
-from .common import Row, spike_count, train_simple
-
-SCHEMES = [
-    ("fp32", lambda: QuantConfig.bf16()),
-    ("full_e2m1", lambda: preset("mxfp4_e2m1")),
-    ("fwd_only_e2m1", lambda: QuantConfig.forward_only("e2m1")),
-    ("bf16_acts_e2m1", lambda: QuantConfig.weights_only("e2m1")),
-    # beyond-paper: adaptive shared scale on the fully-quantized baseline
-    ("adaptive_e2m1", lambda: preset("mxfp4_e2m1").with_adaptive_scale()),
-]
+from .common import Row
 
 
 def run(budget: str = "quick"):
-    steps = 150 if budget == "quick" else 500
-    seeds = range(3) if budget == "quick" else range(8)
-    cfg = ProxyConfig(d_model=128, n_layers=4, batch_size=256)
+    rep = run_sweep(fig6_spec(budget))
     rows = []
-    for name, mk in SCHEMES:
-        qcfg = mk()
-        n_spikes, n_div, finals, us = 0, 0, [], 0.0
-        for seed in seeds:
-            teacher = teacher_init(jax.random.PRNGKey(100 + seed), cfg)
-            student = proxy_init(jax.random.PRNGKey(seed), cfg)
-            import time
-            t0 = time.perf_counter()
-            hist = train_simple(
-                lambda p, b, q: proxy_loss(p, b, cfg, q), student,
-                lambda s: proxy_batch(s, teacher, cfg, seed=seed), qcfg,
-                steps, lr=1e-3)
-            us += (time.perf_counter() - t0) / steps * 1e6
-            n_spikes += spike_count(hist["loss"], 10.0)
-            last = hist["loss"][-1]
-            n_div += (not np.isfinite(last)) or \
-                last > 100 * min(hist["loss"])
-            finals.append(last)
+    for label, s in aggregate(rep, by="label").items():
         rows.append(Row(
-            f"fig6.{name}", us / len(list(seeds)),
-            f"divergent={n_div}/{len(list(seeds))} spikes={n_spikes} "
-            f"median_final={np.nanmedian(finals):.4g}"))
+            label, s["us_per_step"],
+            f"divergent={s['divergent']}/{s['n']} spikes={s['spikes']} "
+            f"median_final={s['median_final']:.4g}"))
     return rows

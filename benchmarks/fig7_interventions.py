@@ -7,79 +7,41 @@ divergence step is compared against the unintervened baseline.  Paper
 claims: early interventions (no-bwd-quant, fp32) avert divergence; bf16
 activations delays it strongly; bumping the shared exponent does not help;
 late interventions delay but cannot avert.
+
+Now a two-stage declarative spec over the sweep engine: the baselines run
+first (their measured divergence step positions the early/late switch),
+then the intervention grid runs with ``RunSpec.phases`` — the engine
+splits the scan at each switch step and recompiles with the intervened
+QuantConfig, exactly like the old hand-rolled loop but jitted end-to-end.
 """
 from __future__ import annotations
 
-import numpy as np
-import jax
+from repro.sweep import run_sweep
+from repro.sweep.presets import fig7_base_spec, fig7_intervention_spec
 
-from repro.core import QuantConfig, apply_intervention, preset
-from repro.models import (ProxyConfig, proxy_batch, proxy_init, proxy_loss,
-                          teacher_init)
-from .common import Row, train_simple
-
-INTERVENTIONS = ["none", "fp32", "no_bwd_quant", "bf16_activations",
-                 "skip_ln_quant", "bump_exponent", "adaptive_scale"]
-
-
-def _run_with_switch(cfg, teacher, qcfg0, switch_step, intervention, steps,
-                     lr, seed=0):
-    """Train with a mid-run QuantConfig swap (recompiles, state kept)."""
-    student = proxy_init(jax.random.PRNGKey(seed), cfg)
-    from repro.optim import AdamWConfig, adamw_init, adamw_update
-    opt_cfg = AdamWConfig(weight_decay=0.0, grad_clip=0.0)
-    opt_state = adamw_init(student, opt_cfg)
-    grad_fn = jax.jit(jax.value_and_grad(
-        lambda p, b, q: proxy_loss(p, b, cfg, q)[0]), static_argnums=(2,))
-    upd = jax.jit(lambda p, s, g, lr: adamw_update(g, s, p, lr, opt_cfg))
-    qcfg = qcfg0
-    losses = []
-    for step in range(steps):
-        if step == switch_step:
-            qcfg = apply_intervention(qcfg0, intervention)
-        batch = proxy_batch(step, teacher, cfg, seed=seed)
-        loss, grads = grad_fn(student, batch, qcfg)
-        student, opt_state, _ = upd(student, opt_state, grads, lr)
-        losses.append(float(loss))
-    return losses
-
-
-def _divergence_step(losses, factor=50.0):
-    ref = losses[0]
-    best = ref
-    for i, l in enumerate(losses):
-        if not np.isfinite(l) or l > factor * best:
-            return i
-        best = min(best, l)
-    return -1  # never diverged
+from .common import Row
 
 
 def run(budget: str = "quick"):
-    steps = 200 if budget == "quick" else 800
-    lr = 2e-3
-    cfg = ProxyConfig(d_model=128, n_layers=4, batch_size=256)
-    teacher = teacher_init(jax.random.PRNGKey(1), cfg)
-    qcfg0 = preset("mxfp4_e2m1")
+    base_spec = fig7_base_spec(budget)
+    steps = base_spec.base.steps   # single source of truth for the horizon
+    base = run_sweep(base_spec)
     rows = []
-    # baseline trajectories
-    base = _run_with_switch(cfg, teacher, qcfg0, -1, "none", steps, lr)
-    d0 = _divergence_step(base)
-    fp32 = _run_with_switch(cfg, teacher, QuantConfig.bf16(), -1, "none",
-                            steps, lr)
-    rows.append(Row("fig7.baseline_mx", 0.0,
-                    f"diverge_step={d0} final={base[-1]:.4g}"))
-    rows.append(Row("fig7.baseline_fp32", 0.0,
-                    f"diverge_step={_divergence_step(fp32)} "
-                    f"final={fp32[-1]:.4g}"))
+    d0 = -1
+    for r in base:
+        rows.append(Row(r.label, r.us_per_step,
+                        f"diverge_step={r.diverge_step} "
+                        f"final={r.final_loss:.4g}"))
+        if r.label == "fig7.baseline_mx":
+            d0 = r.diverge_step
     if d0 < 0:
         d0 = steps // 2  # no divergence at this scale: intervene mid-run
     early, late = max(d0 - steps // 4, 1), max(d0 - 5, 2)
-    for when, sw in (("early", early), ("late", late)):
-        for iv in INTERVENTIONS[1:]:
-            losses = _run_with_switch(cfg, teacher, qcfg0, sw, iv, steps, lr)
-            d = _divergence_step(losses)
-            delay = (d - d0) if d >= 0 else steps - d0
-            rows.append(Row(f"fig7.{when}@{sw}.{iv}", 0.0,
-                            f"diverge_step={d} delay={delay} "
-                            f"final={losses[-1]:.4g}"))
+    rep = run_sweep(fig7_intervention_spec(budget, early, late))
+    for r in rep:
+        d = r.diverge_step
+        delay = (d - d0) if d >= 0 else steps - d0
+        rows.append(Row(r.label, r.us_per_step,
+                        f"diverge_step={d} delay={delay} "
+                        f"final={r.final_loss:.4g}"))
     return rows

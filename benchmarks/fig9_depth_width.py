@@ -2,37 +2,21 @@
 
 Paper claim: at fixed LR, low precision destabilizes at smaller model
 sizes than high precision, concentrated at intermediate widths/depths.
+
+Now a declarative spec over the sweep engine (each (depth, width, scheme)
+cell is its own compiled scan — shapes differ, so cells don't pack, but
+the jitted step loop still replaces the per-step host round-trips).
 """
 from __future__ import annotations
 
-import time
+from repro.sweep import run_sweep
+from repro.sweep.presets import fig9_spec
 
-import jax
-
-from repro.core import preset
-from repro.models import (ProxyConfig, proxy_batch, proxy_init, proxy_loss,
-                          teacher_init)
-from .common import Row, spike_count, train_simple
+from .common import Row
 
 
 def run(budget: str = "quick"):
-    steps = 120 if budget == "quick" else 500
-    grid = [(2, 96), (4, 128)] if budget == "quick" else \
-        [(2, 96), (3, 128), (4, 192), (6, 256)]
-    rows = []
-    for L, D in grid:
-        cfg = ProxyConfig(d_model=D, n_layers=L, batch_size=256)
-        teacher = teacher_init(jax.random.PRNGKey(1), cfg)
-        for prec in ("bf16", "mxfp8_e4m3", "mx_mix", "mxfp4_e2m1"):
-            student = proxy_init(jax.random.PRNGKey(0), cfg)
-            t0 = time.perf_counter()
-            hist = train_simple(
-                lambda p, b, q: proxy_loss(p, b, cfg, q), student,
-                lambda s: proxy_batch(s, teacher, cfg), preset(prec),
-                steps, lr=1e-3)
-            us = (time.perf_counter() - t0) / steps * 1e6
-            rows.append(Row(
-                f"fig9.L{L}.D{D}.{prec}", us,
-                f"spikes={spike_count(hist['loss'], 10.0)} "
-                f"final={hist['loss'][-1]:.4g}"))
-    return rows
+    rep = run_sweep(fig9_spec(budget))
+    return [Row(r.label, r.us_per_step,
+                f"spikes={r.spikes} final={r.final_loss:.4g}")
+            for r in rep]

@@ -16,7 +16,8 @@ from . import (fig1_llm_instability, fig2_lr_sweep, fig3_act_ln,
                fig4_grad_bias, fig5_codes_clamp, fig6_mitigations,
                fig7_interventions, fig9_depth_width, fig10_optim_init,
                kernel_microbench, roofline, serve_throughput,
-               table1_mitigated_loss, table2_scaling_law, train_throughput)
+               sweep_throughput, table1_mitigated_loss, table2_scaling_law,
+               train_throughput)
 from .common import emit, Row
 
 BENCHES = {
@@ -24,6 +25,7 @@ BENCHES = {
     "kernel": kernel_microbench,
     "serve": serve_throughput,
     "train": train_throughput,
+    "sweep": sweep_throughput,
     "fig4": fig4_grad_bias,
     "fig2": fig2_lr_sweep,
     "fig3": fig3_act_ln,
@@ -38,24 +40,29 @@ BENCHES = {
 }
 
 
-def main() -> None:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", default="quick", choices=["quick", "full"])
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="import/registration check only: verify every "
                          "benchmark module exposes run() and exit (CI)")
-    args = ap.parse_args()
-    names = args.only.split(",") if args.only else list(BENCHES)
+    args = ap.parse_args(argv)
+    names = [n.strip() for n in args.only.split(",")
+             if n.strip()] if args.only else list(BENCHES)
+    # report *every* unknown name (not just the first) plus the valid set,
+    # so a long --only list is fixable in one round trip
     unknown = [n for n in names if n not in BENCHES]
     if unknown:
-        ap.error(f"unknown benchmark(s) {unknown}; know {sorted(BENCHES)}")
+        print(f"error: unknown benchmark(s) {unknown}; "
+              f"valid names: {sorted(BENCHES)}", file=sys.stderr)
+        return 2
     if args.smoke:
         bad = [n for n in names if not callable(getattr(BENCHES[n], "run",
                                                         None))]
         print(f"# smoke: {len(names)} benchmark modules importable, "
               f"{len(bad)} missing run()")
-        sys.exit(1 if bad else 0)
+        return 1 if bad else 0
     print("name,us_per_call,derived")
     failures = 0
     for name in names:
@@ -70,8 +77,8 @@ def main() -> None:
                       f"{type(e).__name__}: {str(e)[:160]}")])
             traceback.print_exc(file=sys.stderr)
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
-    sys.exit(1 if failures else 0)
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

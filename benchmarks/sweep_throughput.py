@@ -1,0 +1,153 @@
+"""Sweep-engine throughput: vectorized lane packing vs the sequential
+hand-rolled seed loop it replaced.
+
+  PYTHONPATH=src python -m benchmarks.sweep_throughput [--smoke]
+      [--budget quick|full] [--fake-devices N] [--mesh data,model]
+
+Rows (CSV ``name,us_per_call,derived``):
+
+  sweep.seq.<n>seeds       N sequential train_simple runs (the old
+                           fig*/table* code path: python step loop, one
+                           host sync per step, re-jit per run)
+  sweep.vec.<n>seeds       the same N (seed, qcfg) runs as one vmapped
+                           lane pack through repro.sweep.run_sweep
+  sweep.vec.mesh.<n>seeds  lane axis sharded over the "data" mesh axis
+                           (only when the process has >1 device)
+
+``--smoke`` (CI gate): runs an 8-seed proxy sweep both ways and **fails**
+unless (a) the vectorized engine is >= 3x faster wall-clock than the
+sequential loop on the same host and (b) per-seed final losses agree to
+tolerance (vectorization must not change the optimization problem).
+us_per_call is wall time per *run* per step (lower is better).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+SMOKE_SPEEDUP = 3.0
+
+
+def _runs(n_seeds: int, steps: int, scheme: str = "mxfp8_e4m3"):
+    from repro.sweep import RunSpec
+    base = RunSpec(kind="proxy", d_model=64, n_layers=2, batch_size=128,
+                   steps=steps, lr=1e-3, scheme=scheme, teacher_seed=1)
+    return [dataclasses.replace(base, seed=s) for s in range(n_seeds)]
+
+
+def _sequential(runs):
+    """The pre-sweep-engine code path, verbatim: per-seed train_simple."""
+    import jax
+
+    from repro.core import preset
+    from repro.models import (ProxyConfig, proxy_batch, proxy_init,
+                              proxy_loss, teacher_init)
+
+    from .common import train_simple
+
+    r0 = runs[0]
+    cfg = ProxyConfig(d_model=r0.d_model, n_layers=r0.n_layers,
+                      batch_size=r0.batch_size)
+    finals = []
+    for r in runs:
+        teacher = teacher_init(jax.random.PRNGKey(r.teacher_seed), cfg)
+        student = proxy_init(jax.random.PRNGKey(r.seed), cfg)
+        hist = train_simple(
+            lambda p, b, q: proxy_loss(p, b, cfg, q), student,
+            lambda s: proxy_batch(s, teacher, cfg, seed=r.seed),
+            preset(r.scheme), r.steps, lr=r.lr)
+        finals.append(hist["loss"][-1])
+    return finals
+
+
+def _bench(budget: str = "quick", mesh=None):
+    import jax
+    import numpy as np
+
+    from repro.sweep import run_sweep
+
+    from .common import Row
+
+    n_seeds = 8
+    steps = 40 if budget == "quick" else 200
+    runs = _runs(n_seeds, steps)
+
+    t0 = time.perf_counter()
+    seq_finals = _sequential(runs)
+    t_seq = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    rep = run_sweep(runs)
+    t_vec = time.perf_counter() - t0
+    vec_finals = [rep[r.run_id].final_loss for r in runs]
+
+    per = lambda t: t / n_seeds / steps * 1e6
+    drift = float(np.max(np.abs(np.asarray(vec_finals)
+                                - np.asarray(seq_finals))
+                         / np.maximum(np.abs(seq_finals), 1e-9)))
+    speedup = t_seq / max(t_vec, 1e-9)
+    rows = [
+        Row(f"sweep.seq.{n_seeds}seeds", per(t_seq),
+            f"steps={steps} wall_s={t_seq:.2f}"),
+        Row(f"sweep.vec.{n_seeds}seeds", per(t_vec),
+            f"steps={steps} wall_s={t_vec:.2f} speedup={speedup:.2f}x "
+            f"max_final_drift={drift:.3g}"),
+    ]
+    if mesh is not None and jax.device_count() > 1:
+        t0 = time.perf_counter()
+        rep_m = run_sweep(runs, mesh=mesh)
+        t_mesh = time.perf_counter() - t0
+        mdrift = float(np.max(np.abs(
+            np.asarray([rep_m[r.run_id].final_loss for r in runs])
+            - np.asarray(seq_finals))
+            / np.maximum(np.abs(seq_finals), 1e-9)))
+        rows.append(Row(
+            f"sweep.vec.mesh.{n_seeds}seeds", per(t_mesh),
+            f"steps={steps} wall_s={t_mesh:.2f} mesh={dict(mesh.shape)} "
+            f"speedup={t_seq / max(t_mesh, 1e-9):.2f}x "
+            f"max_final_drift={mdrift:.3g}"))
+    return rows, speedup, drift
+
+
+def run(budget: str = "quick"):
+    """Registry entry (benchmarks.run): rows only."""
+    rows, _, _ = _bench(budget)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", default="quick", choices=["quick", "full"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: vectorized >= 3x sequential + parity")
+    ap.add_argument("--mesh", default=None,
+                    help="data,model mesh for the sharded-lane row")
+    ap.add_argument("--fake-devices", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.fake_devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.fake_devices}")
+
+    from repro.launch.mesh import mesh_from_flag
+
+    from .common import emit
+
+    mesh = mesh_from_flag(args.mesh)
+    print("name,us_per_call,derived")
+    rows, speedup, drift = _bench(args.budget, mesh=mesh)
+    emit(rows)
+    if args.smoke:
+        ok = speedup >= SMOKE_SPEEDUP and drift < 5e-2
+        print(f"# smoke: speedup={speedup:.2f}x (need >= {SMOKE_SPEEDUP}x), "
+              f"final-loss drift={drift:.3g} (need < 5e-2) -> "
+              f"{'OK' if ok else 'FAIL'}")
+        return 0 if ok else 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

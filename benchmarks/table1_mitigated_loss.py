@@ -4,65 +4,29 @@ Grid: weights {E4M3, E5M2} × activations {bf16} (both passes), plus
 {E4M3, E5M2} forward-only — the paper's two stabilized recipes — at
 several model sizes.  Paper claim: E4M3 + bf16 activations matches bf16
 within noise; deltas are O(1e-3)-O(1e-2).
+
+Now a declarative LM spec over the sweep engine's sequential Trainer
+fallback.  The synthetic stream is IID across step indices, so the
+train-loss tail mean is the held-out proxy (held-out step indices = fresh
+data); deltas are computed against each size's bf16 cell.
 """
 from __future__ import annotations
 
-import time
+from repro.sweep import run_sweep
+from repro.sweep.presets import table1_spec
 
-import jax
-import numpy as np
-
-from repro.configs.olmo_paper import olmo
-from repro.core import QuantConfig, preset
-from repro.data.synthetic import lm_input_arrays
-from repro.models import lm_init, lm_loss
-from .common import Row, train_simple
-import dataclasses
-
-SCHEMES = [
-    ("bf16", lambda: preset("bf16")),
-    ("e4m3_bf16act", lambda: preset("e4m3_bf16act")),
-    ("e5m2_bf16act", lambda: preset("e5m2_bf16act")),
-    ("e4m3_fwd_only", lambda: preset("e4m3_fwd_only")),
-    ("e5m2_fwd_only", lambda: preset("e5m2_fwd_only")),
-]
-
-
-def _val_loss(params, cfg, qcfg, n_batches=4):
-    losses = []
-    for i in range(n_batches):
-        b = lm_input_arrays(10_000 + i, cfg, 8, 64)
-        losses.append(float(lm_loss(params, b, cfg, qcfg)[0]))
-    return float(np.mean(losses))
+from .common import Row
 
 
 def run(budget: str = "quick"):
-    steps = 120 if budget == "quick" else 400
-    sizes = [2] if budget == "quick" else [2, 3, 4]
-    rows = []
-    for n in sizes:
-        cfg = dataclasses.replace(olmo(n, vocab=512, context=64),
-                                  loss_chunk=64)
-        base_loss = None
-        for name, mk in SCHEMES:
-            qcfg = mk()
-            params = lm_init(jax.random.PRNGKey(0), cfg)
-            t0 = time.perf_counter()
-            train_hist = train_simple(
-                lambda p, b, q: lm_loss(p, b, cfg, q), params,
-                lambda s: lm_input_arrays(s, cfg, 8, 64), qcfg, steps,
-                lr=1e-3, grad_clip=1.0, weight_decay=0.1)
-            us = (time.perf_counter() - t0) / steps * 1e6
-            # re-init + retrain returns the trained params? train_simple
-            # does not return params; recompute val on the *final* params
-            # via a short re-run is wasteful — instead report train-loss
-            # tail mean as the validation proxy (synthetic stream is IID
-            # across steps, so held-out step indices = fresh data).
-            tail = float(np.mean(train_hist["loss"][-10:]))
-            if name == "bf16":
-                base_loss = tail
-            rows.append(Row(
-                f"table1.n{n}.{name}", us,
-                f"loss={tail:.4f} delta_vs_bf16="
-                f"{tail - base_loss:+.4f}"))
+    rep = run_sweep(table1_spec(budget))
+    rows, base = [], {}
+    for r in rep:
+        size = r.label.split(".")[1]       # "table1.n2.bf16" -> "n2"
+        if r.scheme == "bf16":
+            base[size] = r.tail_mean
+        rows.append(Row(
+            r.label, r.us_per_step,
+            f"loss={r.tail_mean:.4f} delta_vs_bf16="
+            f"{r.tail_mean - base[size]:+.4f}"))
     return rows

@@ -7,21 +7,24 @@ optimizer on log-parameters (Hoffmann-style Huber objective).  Paper
 claim: the mitigated runs admit a *valid* fit (no divergent cells), with
 alpha ≈ beta ≈ 0.5 at their scale; at CPU scale the derived check is fit
 validity + all-cells-finite + exponents in a sane band.
+
+The grid itself is now a declarative LM spec over the sweep engine
+(sequential Trainer fallback, ``keep_params=True``); this module only
+evaluates the held-out cells and fits the law.
 """
 from __future__ import annotations
-
-import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.olmo_paper import olmo
 from repro.core import preset
 from repro.data.synthetic import lm_input_arrays
-from repro.models import lm_init, lm_loss
-from .common import Row, train_simple
+from repro.models import lm_loss
+from repro.sweep import lm_config, run_sweep
+from repro.sweep.presets import table2_spec
+
+from .common import Row
 
 
 def fit_chinchilla(Ns, Ds, Ls, iters=4000):
@@ -59,40 +62,37 @@ def fit_chinchilla(Ns, Ds, Ls, iters=4000):
 
 
 def run(budget: str = "quick"):
-    sizes = [1, 2, 3] if budget == "quick" else [1, 2, 3, 4]
-    step_budgets = [60, 150] if budget == "quick" else [60, 150, 400]
-    B, T = 8, 64
+    spec = table2_spec(budget)
+    runs = spec.expand()
+    rep = run_sweep(runs, keep_params=True)
     rows = []
-    for scheme in (["e4m3_bf16act"] if budget == "quick"
-                   else ["bf16", "e4m3_bf16act", "e5m2_fwd_only"]):
+    schemes = []
+    for r in runs:
+        if r.scheme not in schemes:
+            schemes.append(r.scheme)
+    for scheme in schemes:
         qcfg = preset(scheme)
-        Ns, Ds, Ls = [], [], []
+        Ns, Ds, Ls, us = [], [], [], []
         all_finite = True
-        t0 = time.perf_counter()
-        for n in sizes:
-            cfg = dataclasses.replace(olmo(max(n, 1), vocab=512,
-                                           context=T), loss_chunk=T)
-            for steps in step_budgets:
-                params = lm_init(jax.random.PRNGKey(0), cfg)
-                hist = train_simple(
-                    lambda p, b, q: lm_loss(p, b, cfg, q), params,
-                    lambda s: lm_input_arrays(s, cfg, B, T), qcfg, steps,
-                    lr=1e-3, grad_clip=1.0, weight_decay=0.1)
-                val = []
-                fp = hist["final_params"]
-                for i in range(4):
-                    b = lm_input_arrays(50_000 + i, cfg, B, T)
-                    val.append(float(lm_loss(fp, b, cfg, qcfg)[0]))
-                L = float(np.mean(val))
-                all_finite &= np.isfinite(L)
-                Ns.append(cfg.param_count())
-                Ds.append(steps * B * T)
-                Ls.append(L)
+        for r in runs:
+            if r.scheme != scheme:
+                continue
+            cfg = lm_config(r)
+            res = rep[r.run_id]
+            val = []
+            for i in range(4):
+                b = lm_input_arrays(50_000 + i, cfg, r.lm_batch, r.lm_seq)
+                val.append(float(lm_loss(res.final_params, b, cfg,
+                                         qcfg)[0]))
+            L = float(np.mean(val))
+            all_finite &= bool(np.isfinite(L))
+            Ns.append(cfg.param_count())
+            Ds.append(r.steps * r.lm_batch * r.lm_seq)
+            Ls.append(L)
+            us.append(res.us_per_step)
         fit = fit_chinchilla(Ns, Ds, Ls)
-        us = (time.perf_counter() - t0) * 1e6 / max(
-            sum(step_budgets) * len(sizes), 1)
         rows.append(Row(
-            f"table2.{scheme}", us,
+            f"table2.{scheme}", float(np.mean(us)),
             f"valid_fit={int(all_finite and fit['resid'] < 1.0)} "
             f"alpha={fit['alpha']:.3f} beta={fit['beta']:.3f} "
             f"a_opt={fit['opt_exponent']:.3f} E={fit['E']:.3f} "

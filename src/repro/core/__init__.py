@@ -7,8 +7,8 @@ from .qconfig import (INTERVENTIONS, PRESETS, QuantConfig, apply_intervention,
                       preset)
 from .qlinear import (fused_gemms_enabled, qdot_attn, qeinsum_bmm, qmatmul,
                       use_fused_gemms)
-from .diagnostics import (GradBiasStats, SpikeDetector, grad_bias_probe,
-                          ln_clamp_stats, zeta_bound)
+from .diagnostics import (BatchedSpikeDetector, GradBiasStats, SpikeDetector,
+                          grad_bias_probe, ln_clamp_stats, zeta_bound)
 
 __all__ = [
     "BF16", "E2M1", "E2M3", "E3M2", "E4M3", "E5M2", "FORMATS",
@@ -17,6 +17,6 @@ __all__ = [
     "INTERVENTIONS", "PRESETS", "QuantConfig", "apply_intervention", "preset",
     "qdot_attn", "qeinsum_bmm", "qmatmul", "fused_gemms_enabled",
     "use_fused_gemms",
-    "GradBiasStats", "SpikeDetector", "grad_bias_probe", "ln_clamp_stats",
-    "zeta_bound",
+    "BatchedSpikeDetector", "GradBiasStats", "SpikeDetector",
+    "grad_bias_probe", "ln_clamp_stats", "zeta_bound",
 ]

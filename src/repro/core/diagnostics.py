@@ -21,7 +21,7 @@ from .mx import mx_stats
 from .qconfig import QuantConfig
 
 __all__ = ["grad_bias_probe", "GradBiasStats", "SpikeDetector",
-           "ln_clamp_stats", "zeta_bound"]
+           "BatchedSpikeDetector", "ln_clamp_stats", "zeta_bound"]
 
 
 @dataclasses.dataclass
@@ -127,3 +127,53 @@ class SpikeDetector:
             self._gnorms.append(grad_norm)
         self.n_spikes += int(spiked)
         return spiked
+
+
+class BatchedSpikeDetector:
+    """Per-lane spike accounting for vectorized sweeps.
+
+    One independent :class:`SpikeDetector` per lane — lane ``i`` sees only
+    lane ``i``'s history, so a vmapped sweep produces *exactly* the flags a
+    standalone run of each (seed, qcfg) would (no cross-lane leakage
+    through shared windows or running medians).  Host-side like the scalar
+    detector: feed it the (lanes,)-shaped per-step slices after the sweep's
+    single device→host transfer.
+    """
+
+    def __init__(self, n_lanes: int, spike_factor: float = 100.0,
+                 grad_factor: float = 50.0, window: int = 64):
+        import numpy as np
+        self._np = np
+        self.lanes = [SpikeDetector(spike_factor, grad_factor, window)
+                      for _ in range(n_lanes)]
+
+    def update(self, losses, grad_norms=None):
+        """(lanes,) losses [+ grad norms] -> (lanes,) bool spike flags."""
+        np = self._np
+        losses = np.asarray(losses, np.float64)
+        if grad_norms is None:
+            return np.asarray([d.update(float(l))
+                               for d, l in zip(self.lanes, losses)])
+        grad_norms = np.asarray(grad_norms, np.float64)
+        return np.asarray([d.update(float(l), float(g)) for d, l, g
+                           in zip(self.lanes, losses, grad_norms)])
+
+    @property
+    def n_spikes(self):
+        return self._np.asarray([d.n_spikes for d in self.lanes])
+
+    @staticmethod
+    def flags(losses, grad_norms=None, spike_factor: float = 100.0,
+              grad_factor: float = 50.0, window: int = 64):
+        """(lanes, steps) histories -> (lanes, steps) bool spike flags."""
+        import numpy as np
+        losses = np.atleast_2d(np.asarray(losses, np.float64))
+        det = BatchedSpikeDetector(losses.shape[0], spike_factor,
+                                   grad_factor, window)
+        out = []
+        for t in range(losses.shape[1]):
+            g = None if grad_norms is None else \
+                np.asarray(grad_norms, np.float64)[:, t]
+            out.append(det.update(losses[:, t], g))
+        return np.stack(out, axis=1) if out else \
+            np.zeros(losses.shape, bool)

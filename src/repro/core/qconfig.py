@@ -159,8 +159,13 @@ PRESETS = {
     "e5m2_bf16act": lambda: QuantConfig.weights_only(E5M2),
     "e4m3_fwd_only": lambda: QuantConfig.forward_only(E4M3),
     "e5m2_fwd_only": lambda: QuantConfig.forward_only(E5M2),
+    # FP4 variants of the same mitigations (the Fig. 6 sweep schemes — FP4
+    # amplifies the bias so CPU-scale budgets show the ordering).
+    "e2m1_fwd_only": lambda: QuantConfig.forward_only(E2M1),
+    "e2m1_bf16act": lambda: QuantConfig.weights_only(E2M1),
     # Beyond-paper: adaptive shared scale on the fully-quantized baseline.
     "mxfp8_e4m3_adaptive": lambda: QuantConfig.full(E4M3).with_adaptive_scale(),
+    "mxfp4_e2m1_adaptive": lambda: QuantConfig.full(E2M1).with_adaptive_scale(),
 }
 
 

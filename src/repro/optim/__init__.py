@@ -1,7 +1,7 @@
 from .adamw import (AdamWConfig, adamw_init, adamw_update,
                     clip_by_global_norm, global_norm, sgd_init, sgd_update)
-from .schedule import constant, warmup_cosine
+from .schedule import SCHEDULES, constant, get_schedule, warmup_cosine
 
 __all__ = ["AdamWConfig", "adamw_init", "adamw_update",
            "clip_by_global_norm", "global_norm", "sgd_init", "sgd_update",
-           "constant", "warmup_cosine"]
+           "constant", "warmup_cosine", "get_schedule", "SCHEDULES"]

@@ -5,7 +5,7 @@ import math
 
 import jax.numpy as jnp
 
-__all__ = ["warmup_cosine", "constant"]
+__all__ = ["warmup_cosine", "constant", "get_schedule", "SCHEDULES"]
 
 
 def warmup_cosine(step, total_steps: int, peak: float = 2e-4,
@@ -21,3 +21,20 @@ def warmup_cosine(step, total_steps: int, peak: float = 2e-4,
 
 def constant(step, lr: float):
     return jnp.full((), lr, jnp.float32)
+
+
+# Named per-lane schedules for the sweep engine: fn(step, total_steps, peak)
+# with `peak` allowed to be a traced per-lane array (the executor vmaps the
+# same schedule shape over a per-lane peak LR).
+SCHEDULES = {
+    "constant": lambda step, total, peak: constant(step, peak),
+    "cosine": lambda step, total, peak: warmup_cosine(
+        step, total, peak=peak, init=0.1 * peak, end=0.1 * peak),
+}
+
+
+def get_schedule(name: str):
+    if name not in SCHEDULES:
+        raise KeyError(f"unknown lr schedule {name!r}; know "
+                       f"{sorted(SCHEDULES)}")
+    return SCHEDULES[name]

@@ -1,0 +1,23 @@
+"""Vectorized sweep orchestration for thousand-run instability studies.
+
+The paper's evidence is statistical — ~1000 runs over seeds x precision
+schemes x scales.  This package makes that regime first-class:
+
+  spec      declarative SweepSpec/RunSpec grids with stable run_ids
+  executor  vmapped lane-packed engine (+ sequential Trainer fallback)
+  db        persistent JSONL run database; crash -> re-launch skips
+            completed runs
+  stats     spike/divergence-rate aggregation from run summaries
+  presets   the paper's fig/table experiments as declarative specs
+
+CLI: ``python -m repro.launch.sweep --preset fig6 --db runs.jsonl``.
+"""
+from .db import RunDB
+from .executor import RunResult, SweepReport, lm_config, run_sweep
+from .presets import SWEEP_PRESETS, get_sweep_spec
+from .spec import LANE_FIELDS, RunSpec, SweepSpec, group_key
+from .stats import aggregate, format_table
+
+__all__ = ["RunDB", "RunResult", "SweepReport", "run_sweep", "lm_config",
+           "SWEEP_PRESETS", "get_sweep_spec", "LANE_FIELDS", "RunSpec",
+           "SweepSpec", "group_key", "aggregate", "format_table"]

@@ -1,0 +1,83 @@
+"""Persistent JSONL run database for sweeps.
+
+One line per *completed* run:
+
+  {"run_id": ..., "spec": {RunSpec dict}, "result": {summary stats}}
+
+Append-only with a flush per row, so a crash loses at most the in-flight
+run; on load the newest row per ``run_id`` wins (a re-executed run
+overrides, never duplicates, its aggregate contribution).  ``run_id`` is
+the RunSpec content hash, which is what makes resume safe: re-launching
+the same SweepSpec skips exactly the rows already present and cannot skip
+a run whose definition changed.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Iterable, List, Optional
+
+from .spec import RunSpec
+
+__all__ = ["RunDB"]
+
+
+class RunDB:
+    def __init__(self, path: str):
+        self.path = path
+        self._rows: Dict[str, dict] = {}
+        self._fh = None
+        if os.path.exists(path):
+            with open(path) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    row = json.loads(line)
+                    self._rows[row["run_id"]] = row
+
+    # ---- read -------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def __contains__(self, run_id: str) -> bool:
+        return run_id in self._rows
+
+    def completed_ids(self) -> set:
+        return set(self._rows)
+
+    def rows(self) -> List[dict]:
+        return list(self._rows.values())
+
+    def get(self, run_id: str) -> Optional[dict]:
+        return self._rows.get(run_id)
+
+    def specs(self) -> List[RunSpec]:
+        return [RunSpec.from_dict(r["spec"]) for r in self._rows.values()]
+
+    # ---- write ------------------------------------------------------------
+    def append(self, run_id: str, spec: RunSpec, result: dict):
+        row = {"run_id": run_id, "spec": spec.to_dict(), "result": result}
+        if self._fh is None:
+            os.makedirs(os.path.dirname(os.path.abspath(self.path)),
+                        exist_ok=True)
+            self._fh = open(self.path, "a")
+        self._fh.write(json.dumps(row) + "\n")
+        self._fh.flush()
+        os.fsync(self._fh.fileno())
+        self._rows[run_id] = row
+
+    def extend(self, items: Iterable):
+        for run_id, spec, result in items:
+            self.append(run_id, spec, result)
+
+    def close(self):
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

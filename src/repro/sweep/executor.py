@@ -1,0 +1,508 @@
+"""Sweep execution engines.
+
+Two paths behind one entry point (:func:`run_sweep`):
+
+* **Vectorized** (``kind="proxy"``): independent runs that share every
+  jit-static field (scheme, model shape, optimizer, phases — see
+  ``spec.LANE_FIELDS``) are packed along a leading *lane* axis and executed
+  as one ``lax.scan`` over steps with a ``vmap`` over lanes.  Per-lane
+  params / optimizer state / teacher / RNG / peak-LR ride in the carry, so
+  a pack of N seeds costs ~one run's wall time: a single compile, a single
+  host sync at the end, and batched GEMMs instead of N python loops (the
+  hand-rolled seed loops this replaces paid a device round-trip per step).
+  When a mesh with a ``"data"`` axis is supplied the lane axis is sharded
+  across it (lanes are embarrassingly parallel), so a multi-device host
+  runs N sweeps in ~N/data_parallelism of the packed time.
+
+* **Sequential** (``kind="lm"``): LM-scale runs go one at a time through
+  the fault-tolerant :class:`repro.train.Trainer` (recovery disabled — a
+  sweep must *observe* divergence, not intervene on it), inheriting its
+  mesh/FSDP machinery for specs too large to vmap.
+
+Mid-run precision interventions (``RunSpec.phases``) split the scan at the
+switch steps; each segment compiles with its own static QuantConfig,
+mirroring how the paper's Fig. 7 experiments recompile on a scheme swap.
+
+Per-lane accounting is host-side after the single device→host transfer:
+:class:`repro.core.BatchedSpikeDetector` flags (one independent detector
+per lane — bitwise the flags a standalone run would produce), the Fig. 6
+divergence rule, the Fig. 7 divergence step, and optional ζ-bound probes
+(``track_bias_every``) taken inside the scan against the fp32 gradient.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from .db import RunDB
+from .spec import RunSpec, SweepSpec, group_key
+
+__all__ = ["RunResult", "SweepReport", "run_sweep", "lm_config"]
+
+# Fig. 6 rule: a run diverged if its last loss is non-finite or exceeds
+# 100x the best loss it ever reached.
+DIVERGENT_FACTOR = 100.0
+
+
+@dataclasses.dataclass
+class RunResult:
+    run_id: str
+    label: str
+    scheme: str
+    seed: int
+    lr: float
+    steps: int
+    final_loss: float
+    tail_mean: float
+    min_loss: float
+    max_gnorm: float
+    spikes: int
+    divergent: bool
+    diverge_step: int
+    us_per_step: float
+    zeta_steps: list = dataclasses.field(default_factory=list)
+    zeta: list = dataclasses.field(default_factory=list)
+    cosine: list = dataclasses.field(default_factory=list)
+    # in-memory only (never persisted to the run DB)
+    history: Optional[Dict[str, list]] = None
+    final_params: Any = None
+
+    def summary(self) -> dict:
+        d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)
+             if f.name not in ("history", "final_params", "run_id")}
+        return d
+
+    @staticmethod
+    def from_row(row: dict) -> "RunResult":
+        return RunResult(run_id=row["run_id"], **row["result"])
+
+
+@dataclasses.dataclass
+class SweepReport:
+    results: Dict[str, RunResult]     # run_id -> result (full sweep view)
+    order: List[str]                  # run_ids in expansion order
+    n_executed: int
+    n_skipped: int
+    interrupted: bool                 # stop_after exhausted before the end
+
+    def __iter__(self):
+        return (self.results[rid] for rid in self.order
+                if rid in self.results)
+
+    def __getitem__(self, run_id: str) -> RunResult:
+        return self.results[run_id]
+
+
+# ---------------------------------------------------------------------------
+# host-side accounting shared by both engines
+# ---------------------------------------------------------------------------
+def _diverge_step(losses: np.ndarray, factor: float) -> int:
+    best = losses[0]
+    for i, l in enumerate(losses):
+        if not np.isfinite(l) or l > factor * best:
+            return i
+        best = min(best, l)
+    return -1
+
+
+def _account(r: RunSpec, losses: np.ndarray, gnorms: np.ndarray,
+             spike_flags: np.ndarray, us_per_step: float,
+             zeta_steps=(), zeta=(), cosine=(),
+             history: Optional[dict] = None,
+             final_params=None) -> RunResult:
+    finite = losses[np.isfinite(losses)]
+    last = float(losses[-1]) if len(losses) else float("nan")
+    min_loss = float(finite.min()) if len(finite) else float("nan")
+    tail = float(np.mean(losses[-10:])) if len(losses) else float("nan")
+    divergent = (not np.isfinite(last)) or (
+        len(finite) > 0 and last > DIVERGENT_FACTOR * min_loss)
+    fin_g = gnorms[np.isfinite(gnorms)]
+    return RunResult(
+        run_id=r.run_id, label=r.label or r.scheme, scheme=r.scheme,
+        seed=r.seed, lr=r.lr, steps=int(len(losses)), final_loss=last,
+        tail_mean=tail, min_loss=min_loss,
+        max_gnorm=float(fin_g.max()) if len(fin_g) else float("nan"),
+        spikes=int(spike_flags.sum()), divergent=bool(divergent),
+        diverge_step=_diverge_step(losses, r.diverge_factor)
+        if len(losses) else -1,
+        us_per_step=float(us_per_step),
+        zeta_steps=list(zeta_steps), zeta=list(zeta), cosine=list(cosine),
+        history=history, final_params=final_params)
+
+
+def _spike_flags(losses_2d: np.ndarray, r: RunSpec) -> np.ndarray:
+    """(lanes, steps) loss histories -> per-lane App. B spike flags.
+
+    Loss-only (no grad-norm channel) to match the figure benchmarks'
+    historical ``spike_count`` accounting."""
+    from repro.core import BatchedSpikeDetector
+    return BatchedSpikeDetector.flags(
+        losses_2d, spike_factor=r.spike_factor, window=r.spike_window)
+
+
+# ---------------------------------------------------------------------------
+# vectorized proxy engine
+# ---------------------------------------------------------------------------
+def _phase_segments(r: RunSpec, qcfg0):
+    """[(start, end, qcfg)] step segments from the intervention schedule."""
+    from repro.core import apply_intervention
+    segs, qcfg, prev = [], qcfg0, 0
+    for step, iv in sorted(r.phases):
+        step = int(np.clip(step, 0, r.steps))
+        if step > prev:
+            segs.append((prev, step, qcfg))
+            prev = step
+        qcfg = apply_intervention(qcfg, iv)
+    if prev < r.steps:
+        segs.append((prev, r.steps, qcfg))
+    return segs or [(0, r.steps, qcfg0)]
+
+
+def _pad_lanes(n: int, mesh) -> int:
+    if mesh is None or "data" not in mesh.axis_names:
+        return n
+    d = mesh.shape["data"]
+    return ((n + d - 1) // d) * d
+
+
+def _run_proxy_pack(runs: List[RunSpec], mesh=None,
+                    keep_history: bool = False, keep_params: bool = False
+                    ) -> List[RunResult]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import preset, zeta_bound
+    from repro.models import (ProxyConfig, proxy_batch, proxy_init,
+                              proxy_loss, teacher_init)
+    from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                             get_schedule, sgd_init, sgd_update)
+
+    r0 = runs[0]
+    cfg = ProxyConfig(d_model=r0.d_model, n_layers=r0.n_layers, act=r0.act,
+                      init=r0.init, batch_size=r0.batch_size)
+    # the teacher (data-generating function) keeps its own init so a
+    # student-init ablation does not also change the regression target
+    tcfg = dataclasses.replace(cfg, init=r0.teacher_init_style)
+    qcfg0 = preset(r0.scheme)
+    opt_cfg = AdamWConfig(weight_decay=r0.weight_decay,
+                          grad_clip=r0.grad_clip)
+    sched = get_schedule(r0.lr_schedule)
+    segs = _phase_segments(r0, qcfg0)
+    adam = r0.optimizer == "adam"
+    momentum = 0.9 if r0.optimizer == "momentum" else 0.0
+    track = r0.track_bias_every
+
+    n = len(runs)
+    n_pad = _pad_lanes(n, mesh)
+    padded = runs + [runs[-1]] * (n_pad - n)
+    s_keys = jnp.stack([jax.random.PRNGKey(r.seed) for r in padded])
+    t_keys = jnp.stack([jax.random.PRNGKey(r.teacher_seed) for r in padded])
+    lrs = jnp.asarray([r.lr for r in padded], jnp.float32)
+    dseeds = jnp.asarray([r.effective_data_seed for r in padded], jnp.int32)
+
+    teachers = jax.vmap(lambda k: teacher_init(k, tcfg))(t_keys)
+    students = jax.vmap(lambda k: proxy_init(k, cfg))(s_keys)
+    opt0 = jax.vmap(lambda p: adamw_init(p, opt_cfg))(students) if adam \
+        else jax.vmap(sgd_init)(students)
+
+    if mesh is not None and "data" in mesh.axis_names:
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        lane = NamedSharding(mesh, P("data"))
+        put = lambda tree: jax.tree.map(
+            lambda x: jax.device_put(x, lane), tree)
+        students, opt0, teachers = put(students), put(opt0), put(teachers)
+        lrs, dseeds = put(lrs), put(dseeds)
+
+    def lane_fwd(p, t, dseed, step, qcfg):
+        batch = proxy_batch(step, t, cfg, seed=dseed)
+        loss, grads = jax.value_and_grad(
+            lambda pp, q: proxy_loss(pp, batch, cfg, q)[0])(p, qcfg)
+        return loss, grads
+
+    def lane_zeta(p, t, dseed, step, grads, qcfg):
+        batch = proxy_batch(step, t, cfg, seed=dseed)
+        g_exact = jax.grad(
+            lambda pp, q: proxy_loss(pp, batch, cfg, q)[0])(
+            p, qcfg.to_fp32())
+        zb = zeta_bound(g_exact, grads)
+        return zb["norm_ratio"], zb["cosine"]
+
+    def lane_upd(p, o, lr, step, grads):
+        lr_t = sched(step, r0.steps, lr)
+        if adam:
+            p, o, om = adamw_update(grads, o, p, lr_t, opt_cfg)
+        else:
+            p, o, om = sgd_update(grads, o, p, lr_t, momentum=momentum,
+                                  grad_clip=r0.grad_clip)
+        return p, o, om["grad_norm"]
+
+    def run_all(students, opt0, teachers, lrs, dseeds):
+        carry, outs = (students, opt0), []
+        for a, b, qcfg in segs:
+            def seg(c, step, qcfg=qcfg):
+                p, o = c
+                loss, grads = jax.vmap(
+                    lane_fwd, in_axes=(0, 0, 0, None, None)
+                )(p, teachers, dseeds, step, qcfg)
+                if track:
+                    # the cond sits *outside* the vmap, so the fp32
+                    # reference backward (a full extra grad) really only
+                    # runs on probe steps — inside a vmap it would lower
+                    # to a select that evaluates both branches every step
+                    z, cs = jax.lax.cond(
+                        step % track == 0,
+                        lambda: jax.vmap(
+                            lane_zeta, in_axes=(0, 0, 0, None, 0, None)
+                        )(p, teachers, dseeds, step, grads, qcfg),
+                        lambda: (jnp.full_like(loss, jnp.nan),
+                                 jnp.full_like(loss, jnp.nan)))
+                else:
+                    z = cs = jnp.zeros_like(loss)
+                p, o, gn = jax.vmap(
+                    lane_upd, in_axes=(0, 0, 0, None, 0)
+                )(p, o, lrs, step, grads)
+                return (p, o), (loss, gn, z, cs)
+            carry, out = jax.lax.scan(seg, carry, jnp.arange(a, b))
+            outs.append(out)
+        cat = lambda i: jnp.concatenate([o[i] for o in outs], axis=0)
+        return carry[0], cat(0), cat(1), cat(2), cat(3)
+
+    t0 = time.perf_counter()
+    fparams, losses, gnorms, zetas, coss = jax.jit(run_all)(
+        students, opt0, teachers, lrs, dseeds)
+    losses, gnorms = (np.asarray(x, np.float64).T for x in (losses, gnorms))
+    if track:
+        zetas, coss = (np.asarray(x, np.float64).T for x in (zetas, coss))
+    wall = time.perf_counter() - t0
+    us = wall / max(r0.steps, 1) * 1e6   # pack-level: lanes ran together
+
+    flags = _spike_flags(losses, r0)
+    out = []
+    for i, r in enumerate(runs):
+        zsteps = list(range(0, r.steps, track)) if track else []
+        hist = None
+        if keep_history:
+            hist = {"loss": losses[i].tolist(),
+                    "grad_norm": gnorms[i].tolist(),
+                    "spike_flags": flags[i].tolist()}
+        fp = None
+        if keep_params:
+            fp = jax.tree.map(lambda x: x[i], fparams)
+        out.append(_account(
+            r, losses[i], gnorms[i], flags[i], us,
+            zsteps, [float(zetas[i][s]) for s in zsteps] if track else [],
+            [float(coss[i][s]) for s in zsteps] if track else [],
+            history=hist, final_params=fp))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sequential Trainer engine (LM-scale specs)
+# ---------------------------------------------------------------------------
+def lm_config(r: RunSpec):
+    """The LMConfig a ``kind="lm"`` RunSpec trains (also used by the
+    table benchmarks to read param counts off the swept cells)."""
+    if r.arch == "olmo":
+        from repro.configs.olmo_paper import olmo
+        return dataclasses.replace(
+            olmo(max(r.lm_size, 1), vocab=r.lm_vocab, context=r.lm_seq),
+            loss_chunk=r.lm_seq)
+    from repro.configs import get_config
+    return get_config(r.arch, "smoke")
+
+
+def _run_lm_run(r: RunSpec, mesh=None, keep_history: bool = False,
+                keep_params: bool = False) -> RunResult:
+    import jax
+
+    from repro.core import apply_intervention, preset
+    from repro.data.synthetic import lm_input_arrays
+    from repro.models import lm_init, lm_loss
+    from repro.optim import AdamWConfig
+    from repro.train import Trainer, TrainerConfig
+
+    if r.optimizer != "adam":
+        raise ValueError(
+            f"lm sweeps run through the Trainer, which is AdamW-only "
+            f"(got optimizer={r.optimizer!r})")
+    if r.track_bias_every:
+        raise ValueError("track_bias_every is proxy-only (the Trainer "
+                         "does not recompute fp32 gradients per step)")
+    cfg = lm_config(r)
+    from repro.optim import get_schedule
+    get_schedule(r.lr_schedule)   # reject unknown names up front
+    if r.lr_schedule == "constant":
+        peak = init = end = r.lr
+    elif r.lr_schedule == "cosine":
+        peak, init, end = r.lr, 0.1 * r.lr, 0.1 * r.lr
+    else:
+        raise ValueError(
+            f"lm runs map lr schedules onto the Trainer's warmup-cosine "
+            f"and support only constant/cosine, got {r.lr_schedule!r}")
+    # Recovery machinery off: a sweep characterizes instabilities, it must
+    # not auto-intervene on them.  A non-finite loss still aborts the run
+    # (max_recoveries=0), which is exactly "this run diverged".
+    tcfg = TrainerConfig(
+        total_steps=r.steps, peak_lr=peak, init_lr=init, end_lr=end,
+        auto_intervention=None, max_recoveries=0,
+        spike_factor=float("inf"), grad_factor=float("inf"),
+        log_every=min(50, max(r.steps, 1)))
+    trainer = Trainer(
+        loss_fn=lambda p, b, q: lm_loss(p, b, cfg, q),
+        params=lm_init(jax.random.PRNGKey(r.seed), cfg),
+        qcfg=preset(r.scheme),
+        batch_fn=lambda s: lm_input_arrays(s, cfg, r.lm_batch, r.lm_seq,
+                                           r.effective_data_seed),
+        opt_cfg=AdamWConfig(weight_decay=r.weight_decay,
+                            grad_clip=r.grad_clip),
+        tcfg=tcfg, mesh=mesh)
+    t0 = time.perf_counter()
+    prev = 0
+    for step, iv in sorted(r.phases) + [(r.steps, None)]:
+        step = int(np.clip(step, 0, r.steps))
+        if step > prev and trainer.step < step:
+            trainer.run(step - trainer.step)
+            prev = step
+        if iv is not None:
+            trainer.qcfg = apply_intervention(trainer.qcfg, iv)
+        if len(trainer.history) < prev:   # aborted (non-finite loss)
+            break
+    wall = time.perf_counter() - t0
+
+    losses = np.asarray([h["loss"] for h in trainer.history], np.float64)
+    gnorms = np.asarray([h["grad_norm"] for h in trainer.history],
+                        np.float64)
+    flags = _spike_flags(losses[None, :], r)[0] if len(losses) else \
+        np.zeros((0,), bool)
+    hist = None
+    if keep_history:
+        hist = {"loss": losses.tolist(), "grad_norm": gnorms.tolist(),
+                "spike_flags": flags.tolist()}
+    return _account(r, losses, gnorms, flags,
+                    wall / max(len(losses), 1) * 1e6, history=hist,
+                    final_params=trainer.params if keep_params else None)
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+def run_sweep(spec: Union[SweepSpec, Sequence[RunSpec]], *,
+              db: Union[None, str, RunDB] = None, mesh=None,
+              mode: str = "auto", stop_after: Optional[int] = None,
+              keep_history: bool = False, keep_params: bool = False,
+              verbose: bool = False) -> SweepReport:
+    """Execute a sweep, resumably.
+
+    ``db``           path (or open RunDB): completed run_ids are *skipped*
+                     and their persisted summaries folded into the report;
+                     each newly finished run is appended + flushed, so a
+                     crash loses at most the in-flight pack.
+    ``mesh``         optional jax Mesh; proxy packs shard their lane axis
+                     over the "data" axis, LM runs train FSDP on it.
+    ``mode``         "auto" (vectorize proxy runs) | "sequential" (force
+                     1-lane packs — the parity/throughput reference).
+    ``stop_after``   execute at most this many runs, then return with
+                     ``interrupted=True`` (budgeted execution; also how
+                     the resume tests simulate a mid-grid crash).
+    """
+    if mode not in ("auto", "vectorized", "sequential"):
+        raise ValueError(f"unknown mode {mode!r}")
+    runs = spec.expand() if isinstance(spec, SweepSpec) else list(spec)
+    own_db = isinstance(db, str)
+    rdb = RunDB(db) if own_db else db
+    try:
+        return _run_sweep(runs, rdb, mesh, mode, stop_after, keep_history,
+                          keep_params, verbose)
+    finally:
+        if own_db:
+            rdb.close()
+
+
+def _run_sweep(runs, rdb, mesh, mode, stop_after, keep_history,
+               keep_params, verbose) -> SweepReport:
+
+    results: Dict[str, RunResult] = {}
+    todo: List[RunSpec] = []
+    seen = set()
+    n_skipped = 0
+    for r in runs:
+        rid = r.run_id
+        if rid in seen:
+            continue
+        seen.add(rid)
+        if rdb is not None and rid in rdb:
+            results[rid] = RunResult.from_row(rdb.get(rid))
+            n_skipped += 1
+        else:
+            todo.append(r)
+
+    # pack proxy runs by static signature (first-seen order); lm runs stay
+    # sequential in expansion order after the packs
+    packs: List[List[RunSpec]] = []
+    by_key: Dict[tuple, List[RunSpec]] = {}
+    lm_runs: List[RunSpec] = []
+    for r in todo:
+        if r.kind == "lm":
+            lm_runs.append(r)
+        elif mode == "sequential":
+            packs.append([r])
+        else:
+            k = group_key(r)
+            if k not in by_key:
+                by_key[k] = []
+                packs.append(by_key[k])
+            by_key[k].append(r)
+
+    budget = stop_after
+    n_executed = 0
+    interrupted = False
+
+    def spend(k: int) -> int:
+        nonlocal budget
+        if budget is None:
+            return k
+        take = min(k, budget)
+        budget -= take
+        return take
+
+    for pack in packs:
+        take = spend(len(pack))
+        if take < len(pack):
+            interrupted = True
+        if take == 0:
+            break
+        pack = pack[:take]
+        if verbose:
+            print(f"[sweep] pack x{len(pack)}: {pack[0].label or pack[0].scheme}"
+                  f" steps={pack[0].steps}", flush=True)
+        for r, res in zip(pack, _run_proxy_pack(
+                pack, mesh, keep_history, keep_params)):
+            results[r.run_id] = res
+            n_executed += 1
+            if rdb is not None:
+                rdb.append(r.run_id, r, res.summary())
+    if not interrupted:
+        for r in lm_runs:
+            if spend(1) == 0:
+                interrupted = True
+                break
+            if verbose:
+                print(f"[sweep] lm run: {r.label or r.scheme} "
+                      f"steps={r.steps}", flush=True)
+            res = _run_lm_run(r, mesh, keep_history, keep_params)
+            results[r.run_id] = res
+            n_executed += 1
+            if rdb is not None:
+                rdb.append(r.run_id, r, res.summary())
+
+    order, odone = [], set()
+    for r in runs:
+        if r.run_id not in odone:
+            odone.add(r.run_id)
+            order.append(r.run_id)
+    return SweepReport(results=results, order=order, n_executed=n_executed,
+                       n_skipped=n_skipped, interrupted=interrupted)

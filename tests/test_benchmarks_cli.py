@@ -1,0 +1,38 @@
+"""benchmarks.run CLI: --only validation and sweep registration."""
+import pytest
+
+import benchmarks.run as brun
+
+
+def test_only_reports_all_unknown_names_with_valid_list(capsys):
+    rc = brun.main(["--only", "figX,nope,fig5", "--smoke"])
+    assert rc == 2
+    err = capsys.readouterr().err
+    # every unknown name, not just the first, plus the valid-name list
+    assert "figX" in err and "nope" in err
+    for valid in ("fig5", "fig6", "sweep", "table1"):
+        assert valid in err
+
+
+def test_only_accepts_known_names_and_whitespace(capsys):
+    rc = brun.main(["--only", " fig5 , sweep ", "--smoke"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "2 benchmark modules importable" in out
+
+
+def test_sweep_engine_registered():
+    assert "sweep" in brun.BENCHES
+    assert callable(brun.BENCHES["sweep"].run)
+
+
+def test_smoke_covers_every_registered_benchmark(capsys):
+    rc = brun.main(["--smoke"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert f"{len(brun.BENCHES)} benchmark modules importable" in out
+
+
+@pytest.mark.parametrize("name", sorted(brun.BENCHES))
+def test_registered_module_exposes_run(name):
+    assert callable(getattr(brun.BENCHES[name], "run", None))

@@ -105,3 +105,76 @@ def test_spike_detector_always_flags_giant_spike(losses):
     for loss in losses:
         det.update(float(loss))
     assert det.update(1000.0 * max(losses))
+
+
+# ---------------------------------------------------------------------------
+# sweep-engine lane parity (the statistic-validity property: a vmapped
+# sweep lane must behave exactly like a standalone run of that cell)
+# ---------------------------------------------------------------------------
+@st.composite
+def small_grids(draw):
+    """Random tiny sweep grids: 1-3 lanes over random (seed, lr), one
+    random proxy shape and scheme, short horizons."""
+    import dataclasses
+
+    from repro.sweep import RunSpec
+
+    base = RunSpec(
+        kind="proxy",
+        d_model=draw(st.sampled_from([16, 32])),
+        n_layers=draw(st.integers(1, 2)),
+        batch_size=32,
+        steps=draw(st.integers(3, 8)),
+        scheme=draw(st.sampled_from(["bf16", "mxfp8_e4m3", "mxfp6_e2m3"])),
+        teacher_seed=draw(st.integers(0, 3)),
+        spike_factor=10.0)
+    n = draw(st.integers(1, 3))
+    seeds = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n,
+                          unique=True))
+    lrs = draw(st.lists(st.sampled_from([5e-4, 1e-3, 2e-3]),
+                        min_size=n, max_size=n))
+    return [dataclasses.replace(base, seed=s, lr=lr)
+            for s, lr in zip(seeds, lrs)]
+
+
+@given(runs=small_grids())
+@settings(max_examples=8, deadline=None)
+def test_sweep_lane_parity_property(runs):
+    """Each vmapped lane matches a standalone train_simple-style run of
+    the same (seed, lr, qcfg) to tight tolerance, spike flags included —
+    no leakage through the batched detector or shared RNG streams."""
+    import jax
+
+    from repro.core import SpikeDetector, preset
+    from repro.models import (ProxyConfig, proxy_batch, proxy_init,
+                              proxy_loss, teacher_init)
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+    from repro.sweep import run_sweep
+
+    rep = run_sweep(runs, keep_history=True)
+    r0 = runs[0]
+    cfg = ProxyConfig(d_model=r0.d_model, n_layers=r0.n_layers,
+                      batch_size=r0.batch_size)
+    opt_cfg = AdamWConfig(weight_decay=0.0, grad_clip=0.0)
+    grad_fn = jax.jit(jax.value_and_grad(
+        lambda p, b, q: proxy_loss(p, b, cfg, q)[0]), static_argnums=(2,))
+    for r in runs:
+        teacher = teacher_init(jax.random.PRNGKey(r.teacher_seed), cfg)
+        params = proxy_init(jax.random.PRNGKey(r.seed), cfg)
+        opt = adamw_init(params, opt_cfg)
+        qcfg = preset(r.scheme)
+        det = SpikeDetector(spike_factor=r.spike_factor,
+                            window=r.spike_window)
+        ref_losses, ref_flags = [], []
+        for step in range(r.steps):
+            batch = proxy_batch(step, teacher, cfg,
+                                seed=r.effective_data_seed)
+            loss, grads = grad_fn(params, batch, qcfg)
+            params, opt, _ = adamw_update(grads, opt, params, r.lr,
+                                          opt_cfg)
+            ref_losses.append(float(loss))
+            ref_flags.append(det.update(float(loss)))
+        hist = rep[r.run_id].history
+        np.testing.assert_allclose(hist["loss"], ref_losses, rtol=2e-4,
+                                   atol=1e-7)
+        assert hist["spike_flags"] == ref_flags

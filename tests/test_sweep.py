@@ -1,0 +1,381 @@
+"""Sweep engine: spec algebra, determinism, lane parity, resume, DB.
+
+Determinism is tier-1 on purpose: the paper's claims are *statistics over
+runs* (divergence rates per scheme), and those statistics are only
+meaningful if re-executing a RunSpec reproduces the identical trajectory.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import BatchedSpikeDetector, SpikeDetector
+from repro.sweep import (RunDB, RunSpec, SweepSpec, aggregate, group_key,
+                         run_sweep)
+
+TINY = RunSpec(kind="proxy", d_model=32, n_layers=2, batch_size=64,
+               steps=12, lr=1e-3, scheme="mxfp8_e4m3", teacher_seed=1,
+               spike_factor=10.0)
+
+
+# ---------------------------------------------------------------------------
+# spec algebra
+# ---------------------------------------------------------------------------
+def test_sweep_spec_expansion_product_order():
+    spec = SweepSpec.make("s", TINY, {"seed": (0, 1), "scheme":
+                                      ("bf16", "mxfp8_e4m3")})
+    runs = spec.expand()
+    assert [(r.seed, r.scheme) for r in runs] == [
+        (0, "bf16"), (0, "mxfp8_e4m3"), (1, "bf16"), (1, "mxfp8_e4m3")]
+
+
+def test_sweep_spec_linked_axes_and_label_fmt():
+    spec = SweepSpec.make(
+        "s", TINY, {"seed,teacher_seed": ((0, 100), (1, 101))},
+        label_fmt="s{seed}.t{teacher_seed}")
+    runs = spec.expand()
+    assert [(r.seed, r.teacher_seed) for r in runs] == [(0, 100), (1, 101)]
+    assert [r.label for r in runs] == ["s0.t100", "s1.t101"]
+
+
+def test_run_id_stable_and_distinct():
+    a = dataclasses.replace(TINY, seed=0)
+    assert a.run_id == dataclasses.replace(TINY, seed=0).run_id
+    assert a.run_id != dataclasses.replace(TINY, seed=1).run_id
+    assert a.run_id != dataclasses.replace(TINY, lr=2e-3).run_id
+    # round trip through JSON preserves identity (resume keys on this)
+    assert RunSpec.from_dict(json.loads(
+        json.dumps(a.to_dict()))).run_id == a.run_id
+
+
+def test_sweep_spec_json_round_trip():
+    spec = SweepSpec.make(
+        "s", dataclasses.replace(TINY, phases=((5, "fp32"),)),
+        {"seed": (0, 1)}, label_fmt="x{seed}")
+    back = SweepSpec.from_json(spec.to_json())
+    assert [r.run_id for r in back.expand()] == \
+        [r.run_id for r in spec.expand()]
+
+
+def test_group_key_packs_lanes_and_label_is_free():
+    a = dataclasses.replace(TINY, seed=0, lr=1e-3, label="a")
+    b = dataclasses.replace(TINY, seed=1, lr=2e-3, label="b")
+    c = dataclasses.replace(TINY, scheme="bf16")
+    assert group_key(a) == group_key(b)   # lane fields + label free
+    assert group_key(a) != group_key(c)   # scheme is static
+
+
+def test_run_spec_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown RunSpec fields"):
+        RunSpec.from_dict({"nonsense": 1})
+
+
+# ---------------------------------------------------------------------------
+# determinism (tier-1: sweep statistics are invalid without it)
+# ---------------------------------------------------------------------------
+def test_runspec_reexecution_bitwise_identical():
+    runs = [dataclasses.replace(TINY, seed=s) for s in (0, 1)]
+    h1 = run_sweep(runs, keep_history=True)
+    h2 = run_sweep(runs, keep_history=True)
+    for r in runs:
+        a, b = h1[r.run_id].history, h2[r.run_id].history
+        assert a["loss"] == b["loss"]            # bitwise: same floats
+        assert a["grad_norm"] == b["grad_norm"]
+        assert a["spike_flags"] == b["spike_flags"]
+
+
+def test_trainer_run_bitwise_deterministic():
+    from repro.configs import get_config
+    from repro.core import preset
+    from repro.data.synthetic import lm_input_arrays
+    from repro.models import lm_init, lm_loss
+    from repro.optim import AdamWConfig
+    from repro.train import Trainer, TrainerConfig
+
+    cfg = get_config("olmo-paper", "smoke")
+
+    def hist():
+        tcfg = TrainerConfig(total_steps=4, peak_lr=1e-3, log_every=2,
+                             auto_intervention=None)
+        tr = Trainer(
+            loss_fn=lambda p, b, q: lm_loss(p, b, cfg, q),
+            params=lm_init(jax.random.PRNGKey(3), cfg),
+            qcfg=preset("mxfp8_e4m3"),
+            batch_fn=lambda s: lm_input_arrays(s, cfg, 2, 16, seed=3),
+            opt_cfg=AdamWConfig(), tcfg=tcfg)
+        return tr.run(4)
+
+    a, b = hist(), hist()
+    assert [h["loss"] for h in a] == [h["loss"] for h in b]
+    assert [h["grad_norm"] for h in a] == [h["grad_norm"] for h in b]
+
+
+# ---------------------------------------------------------------------------
+# lane parity vs the standalone loop
+# ---------------------------------------------------------------------------
+def _standalone(r: RunSpec):
+    """Reference: per-run python loop (the old benchmark code path)."""
+    from repro.core import preset
+    from repro.models import (ProxyConfig, proxy_batch, proxy_init,
+                              proxy_loss, teacher_init)
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    cfg = ProxyConfig(d_model=r.d_model, n_layers=r.n_layers,
+                      batch_size=r.batch_size)
+    qcfg = preset(r.scheme)
+    teacher = teacher_init(jax.random.PRNGKey(r.teacher_seed), cfg)
+    params = proxy_init(jax.random.PRNGKey(r.seed), cfg)
+    opt_cfg = AdamWConfig(weight_decay=r.weight_decay,
+                          grad_clip=r.grad_clip)
+    opt = adamw_init(params, opt_cfg)
+    grad_fn = jax.jit(jax.value_and_grad(
+        lambda p, b, q: proxy_loss(p, b, cfg, q)[0]), static_argnums=(2,))
+    losses = []
+    for step in range(r.steps):
+        batch = proxy_batch(step, teacher, cfg, seed=r.effective_data_seed)
+        loss, grads = grad_fn(params, batch, qcfg)
+        params, opt, _ = adamw_update(grads, opt, params, r.lr, opt_cfg)
+        losses.append(float(loss))
+    return losses
+
+
+def test_vectorized_lanes_match_standalone_runs():
+    runs = [dataclasses.replace(TINY, seed=s, lr=lr, teacher_seed=50 + s)
+            for s, lr in ((0, 1e-3), (1, 2e-3), (2, 5e-4))]
+    rep = run_sweep(runs, keep_history=True)
+    for r in runs:
+        ref = np.asarray(_standalone(r))
+        got = np.asarray(rep[r.run_id].history["loss"])
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=1e-7)
+        det = SpikeDetector(r.spike_factor, window=r.spike_window)
+        ref_flags = [det.update(float(l)) for l in ref]
+        # same spike decisions as a standalone detector over the
+        # standalone trajectory — no cross-lane leakage
+        assert rep[r.run_id].history["spike_flags"] == ref_flags
+
+
+def test_sequential_mode_matches_vectorized_results():
+    runs = [dataclasses.replace(TINY, seed=s) for s in (0, 1)]
+    vec = run_sweep(runs, keep_history=True)
+    seq = run_sweep(runs, keep_history=True, mode="sequential")
+    for r in runs:
+        np.testing.assert_allclose(seq[r.run_id].history["loss"],
+                                   vec[r.run_id].history["loss"],
+                                   rtol=2e-4, atol=1e-7)
+
+
+def test_phase_intervention_changes_trajectory():
+    base = dataclasses.replace(TINY, scheme="mxfp4_e2m1", steps=16)
+    switched = dataclasses.replace(base, phases=((8, "fp32"),))
+    rep = run_sweep([base, switched], keep_history=True)
+    a = rep[base.run_id].history["loss"]
+    b = rep[switched.run_id].history["loss"]
+    assert a[:8] == b[:8]          # identical before the switch
+    assert a[8:] != b[8:]          # intervention takes effect at step 8
+
+
+# ---------------------------------------------------------------------------
+# batched spike detector
+# ---------------------------------------------------------------------------
+def test_batched_spike_detector_matches_scalar_per_lane():
+    rng = np.random.RandomState(0)
+    lanes = np.abs(rng.lognormal(size=(4, 40)))
+    lanes[1, 25] = np.nan
+    flags = BatchedSpikeDetector.flags(lanes, spike_factor=10.0)
+    for i in range(lanes.shape[0]):
+        det = SpikeDetector(spike_factor=10.0)
+        ref = [det.update(float(l)) for l in lanes[i]]
+        assert flags[i].tolist() == ref
+
+
+def test_batched_spike_detector_no_cross_lane_leakage():
+    # smoothly decreasing losses never spike; inject events in single lanes
+    lanes = np.tile(1.0 / (np.arange(40) + 1.0), (4, 1))
+    lanes[1, 25] = np.nan                       # non-finite flags lane 1
+    lanes[2, 30] = 1e4                          # 10x-over-min spike lane 2
+    flags = BatchedSpikeDetector.flags(lanes, spike_factor=10.0)
+    assert flags[1, 25] and flags[2, 30]
+    expect = np.zeros_like(flags)
+    expect[1, 25] = expect[2, 30] = True
+    np.testing.assert_array_equal(flags, expect)
+
+
+# ---------------------------------------------------------------------------
+# run database + resume
+# ---------------------------------------------------------------------------
+def _grid(n=6):
+    return [dataclasses.replace(TINY, seed=s, scheme=sc)
+            for sc in ("bf16", "mxfp8_e4m3") for s in range(n // 2)]
+
+
+def test_sweep_resume_skips_completed_and_matches_uninterrupted(tmp_path):
+    runs = _grid()
+    # uninterrupted reference
+    ref_db = str(tmp_path / "ref.jsonl")
+    run_sweep(runs, db=ref_db)
+    # interrupted: stop mid-grid, then re-launch
+    db = str(tmp_path / "runs.jsonl")
+    first = run_sweep(runs, db=db, stop_after=2)
+    assert first.interrupted and first.n_executed == 2
+    second = run_sweep(runs, db=db)
+    assert second.n_skipped == 2
+    assert second.n_executed == len(runs) - 2
+    assert not second.interrupted
+    # no duplicate rows in the file itself
+    with open(db) as f:
+        ids = [json.loads(l)["run_id"] for l in f if l.strip()]
+    assert len(ids) == len(set(ids)) == len(runs)
+    # aggregates from the resumed DB equal the uninterrupted sweep's
+    # (drop the wall-clock column, the one legitimately non-deterministic
+    # quantity)
+    agg_resumed = aggregate(RunDB(db), by="scheme")
+    agg_ref = aggregate(RunDB(ref_db), by="scheme")
+    for agg in (agg_resumed, agg_ref):
+        for s in agg.values():
+            s.pop("us_per_step")
+    assert agg_resumed == agg_ref
+
+
+def test_run_db_dedupes_on_load_newest_wins(tmp_path):
+    path = str(tmp_path / "db.jsonl")
+    r = TINY
+    with RunDB(path) as db:
+        db.append(r.run_id, r, {"final_loss": 1.0})
+        db.append(r.run_id, r, {"final_loss": 2.0})
+    db2 = RunDB(path)
+    assert len(db2) == 1
+    assert db2.get(r.run_id)["result"]["final_loss"] == 2.0
+
+
+def test_run_sweep_skips_only_matching_run_ids(tmp_path):
+    db = str(tmp_path / "db.jsonl")
+    a = dataclasses.replace(TINY, seed=0)
+    run_sweep([a], db=db)
+    # a *changed* spec (more steps) must re-execute, not skip
+    b = dataclasses.replace(TINY, seed=0, steps=TINY.steps + 2)
+    rep = run_sweep([a, b], db=db)
+    assert rep.n_skipped == 1 and rep.n_executed == 1
+    assert rep[b.run_id].steps == TINY.steps + 2
+
+
+# ---------------------------------------------------------------------------
+# sequential LM fallback
+# ---------------------------------------------------------------------------
+def test_lm_fallback_runs_through_trainer():
+    r = RunSpec(kind="lm", arch="olmo", lm_size=1, lm_vocab=64, lm_batch=2,
+                lm_seq=16, steps=3, lr=1e-3, grad_clip=1.0,
+                weight_decay=0.1)
+    rep = run_sweep([r], keep_history=True, keep_params=True)
+    res = rep[r.run_id]
+    assert res.steps == 3
+    assert np.isfinite(res.history["loss"]).all()
+    assert res.final_params is not None
+
+
+def test_lm_fallback_rejects_non_adam():
+    r = RunSpec(kind="lm", optimizer="sgd", steps=2)
+    with pytest.raises(ValueError, match="AdamW-only"):
+        run_sweep([r])
+
+
+# ---------------------------------------------------------------------------
+# aggregation
+# ---------------------------------------------------------------------------
+def test_aggregate_from_report_equals_aggregate_from_db(tmp_path):
+    runs = _grid(4)
+    db = str(tmp_path / "db.jsonl")
+    rep = run_sweep(runs, db=db)
+    assert aggregate(rep, by="scheme") == aggregate(RunDB(db), by="scheme")
+
+
+# ---------------------------------------------------------------------------
+# mesh lane sharding (multi-device; subprocess pins the fake device count)
+# ---------------------------------------------------------------------------
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses, json
+import numpy as np
+from repro.launch.mesh import make_local_mesh
+from repro.sweep import RunSpec, run_sweep
+
+base = RunSpec(kind="proxy", d_model=32, n_layers=2, batch_size=64,
+               steps=10, lr=1e-3, scheme="mxfp8_e4m3", teacher_seed=1)
+# 6 lanes on a data=4 mesh: exercises padding to a multiple of the axis
+runs = [dataclasses.replace(base, seed=s) for s in range(6)]
+ref = run_sweep(runs, keep_history=True)
+sh = run_sweep(runs, mesh=make_local_mesh(data=4, model=1),
+               keep_history=True)
+err = max(float(np.max(np.abs(
+            np.asarray(sh[r.run_id].history["loss"])
+            - np.asarray(ref[r.run_id].history["loss"]))
+            / np.maximum(np.abs(ref[r.run_id].history["loss"]), 1e-9)))
+          for r in runs)
+print(json.dumps({"err": err, "n": len(runs)}))
+"""
+
+
+@pytest.mark.slow
+def test_mesh_sharded_lanes_match_unsharded():
+    import subprocess
+    import sys
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ, PYTHONPATH=os.path.abspath(src))
+    out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["err"] < 1e-3, res
+
+
+def test_zeta_probe_sampled_at_stride():
+    r = dataclasses.replace(TINY, track_bias_every=4, steps=10,
+                            scheme="mxfp4_e2m1")
+    rep = run_sweep([r])
+    res = rep[r.run_id]
+    assert res.zeta_steps == [0, 4, 8]
+    assert len(res.zeta) == len(res.cosine) == 3
+    assert np.isfinite(res.zeta).all() and np.isfinite(res.cosine).all()
+    # fp4 quantization bias is real: the ζ lower bound is strictly > 0
+    assert min(res.zeta) > 0
+
+
+def test_student_init_ablation_keeps_teacher_fixed():
+    # the data-generating teacher must NOT follow the student's init
+    # ablation (App. B protocol); parity vs a standalone loop whose
+    # teacher uses the default init pins this
+    r = dataclasses.replace(TINY, init="xavier_lowgain", steps=6)
+    rep = run_sweep([r], keep_history=True)
+    from repro.core import preset
+    from repro.models import (ProxyConfig, proxy_batch, proxy_init,
+                              proxy_loss, teacher_init)
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    tcfg = ProxyConfig(d_model=r.d_model, n_layers=r.n_layers,
+                       batch_size=r.batch_size)          # default init
+    scfg = dataclasses.replace(tcfg, init="xavier_lowgain")
+    teacher = teacher_init(jax.random.PRNGKey(r.teacher_seed), tcfg)
+    params = proxy_init(jax.random.PRNGKey(r.seed), scfg)
+    opt_cfg = AdamWConfig(weight_decay=0.0, grad_clip=0.0)
+    opt = adamw_init(params, opt_cfg)
+    qcfg = preset(r.scheme)
+    losses = []
+    for step in range(r.steps):
+        batch = proxy_batch(step, teacher, scfg,
+                            seed=r.effective_data_seed)
+        loss, grads = jax.value_and_grad(
+            lambda p: proxy_loss(p, batch, scfg, qcfg)[0])(params)
+        params, opt, _ = adamw_update(grads, opt, params, r.lr, opt_cfg)
+        losses.append(float(loss))
+    np.testing.assert_allclose(rep[r.run_id].history["loss"], losses,
+                               rtol=2e-4, atol=1e-7)
+
+
+def test_lm_fallback_rejects_unknown_schedule():
+    r = RunSpec(kind="lm", lr_schedule="cosnie", steps=2)
+    with pytest.raises(KeyError, match="unknown lr schedule"):
+        run_sweep([r])
