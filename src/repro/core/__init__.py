@@ -4,7 +4,7 @@ from .formats import (BF16, E2M1, E2M3, E3M2, E4M3, E5M2, FORMATS,
                       quantize_elem)
 from .mx import MX_BLOCK, mx_stats, quantize_mx
 from .qconfig import (INTERVENTIONS, PRESETS, QuantConfig, apply_intervention,
-                      preset)
+                      list_interventions, list_presets, preset)
 from .qlinear import (fused_gemms_enabled, qdot_attn, qeinsum_bmm, qmatmul,
                       use_fused_gemms)
 from .diagnostics import (BatchedSpikeDetector, GradBiasStats, SpikeDetector,
@@ -15,6 +15,7 @@ __all__ = [
     "ElementFormat", "get_format", "positive_codes", "quantize_elem",
     "MX_BLOCK", "mx_stats", "quantize_mx",
     "INTERVENTIONS", "PRESETS", "QuantConfig", "apply_intervention", "preset",
+    "list_interventions", "list_presets",
     "qdot_attn", "qeinsum_bmm", "qmatmul", "fused_gemms_enabled",
     "use_fused_gemms",
     "BatchedSpikeDetector", "GradBiasStats", "SpikeDetector",

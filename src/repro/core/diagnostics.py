@@ -38,7 +38,19 @@ def _flat(tree) -> jax.Array:
 
 
 def zeta_bound(g_exact, g_quant) -> Dict[str, jax.Array]:
-    """Norm ratio and cosine between exact and low-precision gradients."""
+    """Norm ratio and cosine between exact and low-precision gradients.
+
+    Both pytrees are flattened to fp32 vectors over *all* leaves before any
+    norm is taken (global, not per-tensor).  Returned scalars:
+
+      norm_ratio — ‖g_quant − g_exact‖₂ / ‖g_exact‖₂, dimensionless; a
+                   *lower bound* on the operator norm ‖ζ‖_op of the paper's
+                   multiplicative bias (Eq. 4).  0 = unbiased; divergence
+                   empirically follows once a running value ≈ 2 (Fig. 4).
+      cosine     — cos(g_quant, g_exact) ∈ [−1, 1] (1 = same direction).
+      g_norm     — ‖g_exact‖₂ (un-normalized, units of the loss gradient).
+      gq_norm    — ‖g_quant‖₂ (same units).
+    """
     ge, gq = _flat(g_exact), _flat(g_quant)
     eps = gq - ge
     gn = jnp.linalg.norm(ge)
@@ -57,7 +69,9 @@ def grad_bias_probe(grad_fn: Callable, params, batch,
     variant of the paper's Fig. 4 measurement: both gradients are taken at
     identical parameters and batch, so the deviation is attributable purely
     to quantization (the paper's two-trajectory protocol is available in
-    benchmarks/fig4_grad_bias.py as well).
+    benchmarks/fig4_grad_bias.py as well).  Returns the :func:`zeta_bound`
+    dict — ``norm_ratio``/``cosine`` dimensionless (global-flattened, see
+    there), ``g_norm``/``gq_norm`` in loss-gradient units.
     """
     g_exact = grad_fn(params, batch, qcfg.to_fp32())
     g_quant = grad_fn(params, batch, qcfg)
@@ -69,7 +83,14 @@ def ln_clamp_stats(params, qcfg: QuantConfig,
     """Last-bin / tight-block fractions for every layernorm affine tensor.
 
     Walks the param pytree, selects leaves whose path contains ``match``
-    (layernorm scales), and reports the paper's Fig. 5-center quantities.
+    (layernorm scales), and reports the paper's Fig. 5-center quantities:
+    one ``mx_stats`` dict per matched leaf, keyed by its pytree path.  All
+    four entries are fractions in [0, 1] normalized over the *unpadded*
+    values (``overflow_frac``, ``last_bin_frac``, ``tight_block_frac``)
+    or a mean relative error (``rel_err``); see :func:`repro.core.mx.mx_stats`.
+    Blocks are taken along the flattened tensor with the qcfg's block size
+    and scale mode, in the format ``qcfg.ln_fmt or qcfg.a_fwd`` (empty dict
+    when both are None — LN affine unquantized).
     """
     fmt = qcfg.ln_fmt or qcfg.a_fwd
     out = {}

@@ -22,8 +22,8 @@ from typing import Optional
 from .formats import E2M1, E2M3, E3M2, E4M3, E5M2, ElementFormat, get_format
 from .mx import MX_BLOCK
 
-__all__ = ["QuantConfig", "PRESETS", "preset", "apply_intervention",
-           "INTERVENTIONS"]
+__all__ = ["QuantConfig", "PRESETS", "preset", "list_presets",
+           "apply_intervention", "INTERVENTIONS", "list_interventions"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,9 +169,15 @@ PRESETS = {
 }
 
 
+def list_presets() -> list:
+    """Sorted names accepted by :func:`preset` (CLI / policy parsers)."""
+    return sorted(PRESETS)
+
+
 def preset(name: str) -> QuantConfig:
     if name not in PRESETS:
-        raise KeyError(f"unknown precision preset {name!r}; know {sorted(PRESETS)}")
+        raise KeyError(
+            f"unknown precision preset {name!r}; know {list_presets()}")
     return PRESETS[name]()
 
 
@@ -187,8 +193,14 @@ INTERVENTIONS = {
 }
 
 
+def list_interventions() -> list:
+    """Sorted names accepted by :func:`apply_intervention` (guard policy
+    ladders and RunSpec phases validate against this)."""
+    return sorted(INTERVENTIONS)
+
+
 def apply_intervention(cfg: QuantConfig, name: str) -> QuantConfig:
     if name not in INTERVENTIONS:
         raise KeyError(
-            f"unknown intervention {name!r}; know {sorted(INTERVENTIONS)}")
+            f"unknown intervention {name!r}; know {list_interventions()}")
     return INTERVENTIONS[name](cfg)

@@ -1,0 +1,32 @@
+"""repro.guard — online instability forecasting + precision autopilot.
+
+The paper's mitigation result (Fig. 7, Table 1) is that MX divergences are
+*predictable* (ζ-bound growth, LN-affine clamping, grad-norm decoupling)
+and *avertable* by switching the precision scheme before the loss blows
+up.  This package closes that loop proactively:
+
+  monitors.py    in-jit RiskSignals per step + lax.cond-gated ζ/clamp probes
+  policy.py      declarative threshold/hysteresis policies (non-flapping)
+  controller.py  PrecisionController: qcfg transitions, journal, replay
+
+Wired through `repro.train.Trainer` (first line of defense ahead of the
+spike-rollback recovery), the sweep engine (scheduled policies compile to
+the phase-split scan; online policies run advisorily over lanes), and the
+`--guard` CLI flag of `repro.launch.train`.
+"""
+from .controller import (PrecisionController, advisory_journals,
+                         schedule_from_journal)
+from .monitors import (SIGNAL_NAMES, MonitorConfig, MonitorState,
+                       RiskSignals, host_signals, monitor_init,
+                       monitor_update, signals_from_metrics)
+from .policy import (POLICY_PRESETS, Decision, GuardPolicy, PolicyState,
+                     Rule, decide, get_policy, list_policies,
+                     scheduled_policy)
+
+__all__ = [
+    "PrecisionController", "schedule_from_journal", "advisory_journals",
+    "MonitorConfig", "MonitorState", "RiskSignals", "SIGNAL_NAMES",
+    "monitor_init", "monitor_update", "signals_from_metrics", "host_signals",
+    "GuardPolicy", "PolicyState", "Rule", "Decision", "decide",
+    "POLICY_PRESETS", "get_policy", "list_policies", "scheduled_policy",
+]

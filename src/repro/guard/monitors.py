@@ -1,0 +1,272 @@
+"""In-jit early-warning monitors: cheap per-step risk signals + gated probes.
+
+The paper's §5-§6 result is that an MX divergence announces itself *before*
+the loss blows up: the multiplicative gradient bias (ζ-bound) grows, the
+layernorm-affine blocks clamp, and the gradient norm decouples from its
+running level.  This module computes those early warnings *inside* the
+jitted train step, so the autopilot (`repro.guard.controller`) can act on
+them without per-step host syncs:
+
+* **cheap channels** (every step, a handful of scalar flops): loss EMA pair
+  (fast/slow) and their relative gap — the "curvature" of the loss trend —
+  plus the gradient-norm ratio against its own EMA;
+* **probe channels** (every ``probe_every`` steps, gated behind a
+  ``lax.cond`` so the expensive work is *not* executed on other steps):
+  the ζ-bound against an fp32 reference gradient (a full extra backward —
+  the cond keeps it off the hot path), LN-affine clamp fractions, and the
+  activation-tail overflow rate measured on the gradient stream (the
+  gradient inherits the activation tail through wgrad, and is the tensor
+  we already hold).
+
+Between probes, probe channels hold their last value and ``probe_age``
+counts steps since measurement — a policy can require fresh probes.
+
+All state lives in :class:`MonitorState` (a NamedTuple of device scalars),
+threaded through the step function's carry, so monitors compose with
+donation, explicit shardings, and ``lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig
+from repro.core.mx import mx_stats
+
+__all__ = ["MonitorConfig", "MonitorState", "RiskSignals", "monitor_init",
+           "monitor_update", "signals_from_metrics", "host_signals",
+           "SIGNAL_NAMES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MonitorConfig:
+    """Static (hashable) monitor knobs — rides the jit cache like qcfg."""
+    ema_fast: float = 0.2       # fast loss EMA coefficient (per step)
+    ema_slow: float = 0.02      # slow loss EMA coefficient
+    gnorm_ema: float = 0.05     # grad-norm EMA coefficient
+    probe_every: int = 0        # probe stride in steps; 0 disables probes
+    zeta_probe: bool = True     # include the fp32 reference grad in probes
+    ln_match: str = "ln"        # param-path substring naming LN affines
+    max_probe_leaves: int = 8   # cap on grad leaves scanned for overflow
+
+
+class RiskSignals(NamedTuple):
+    """Per-step on-device risk scalars (fp32).  All dimensionless:
+
+    loss_ema_fast / loss_ema_slow — smoothed loss levels (loss units);
+    loss_curvature — (fast − slow) / max(|slow|, eps): > 0 when the loss is
+        rising above its own trend, the pre-spike signature;
+    loss_ratio     — instantaneous loss / slow EMA: the same quantity the
+        App.-B spike heuristic thresholds at 100x, measured against the
+        trend at every step — the earliest-warning channel (a guard
+        policy typically triggers at 1.5-3x, long before the watchdog);
+    gnorm_ratio    — grad norm / its EMA (1 ≈ steady state);
+    ln_tight_frac  — mean fraction of LN-affine blocks fully clamped into
+        the last quantization bin (paper Fig. 5-center; probe channel);
+    ln_last_bin    — mean fraction of LN-affine values in the last bin;
+    grad_overflow  — mean pre-clamp overflow fraction of sampled gradient
+        blocks under the backward element format (activation-tail channel);
+    zeta           — ‖g̃−ḡ‖/‖ḡ‖ lower bound on ‖ζ‖_op vs fp32 reference
+        (probe channel; divergence empirically follows near 2, Fig. 4);
+    cosine         — cos(g̃, ḡ) of the same probe;
+    probe_age      — steps since the probe channels were last measured.
+    """
+    loss_ema_fast: jax.Array
+    loss_ema_slow: jax.Array
+    loss_curvature: jax.Array
+    loss_ratio: jax.Array
+    gnorm_ratio: jax.Array
+    ln_tight_frac: jax.Array
+    ln_last_bin: jax.Array
+    grad_overflow: jax.Array
+    zeta: jax.Array
+    cosine: jax.Array
+    probe_age: jax.Array
+
+
+SIGNAL_NAMES = tuple(RiskSignals._fields)
+
+
+class MonitorState(NamedTuple):
+    count: jax.Array          # steps observed
+    ema_fast: jax.Array
+    ema_slow: jax.Array
+    gnorm_ema: jax.Array
+    ln_tight: jax.Array       # held probe values
+    ln_last: jax.Array
+    g_ovf: jax.Array
+    zeta: jax.Array
+    cosine: jax.Array
+    probe_age: jax.Array
+
+
+def monitor_init(mcfg: Optional[MonitorConfig] = None) -> MonitorState:
+    # distinct buffers per field: the state is donated through the train
+    # step, and donating one aliased buffer twice is an XLA error
+    z = lambda: jnp.zeros((), jnp.float32)
+    return MonitorState(count=jnp.zeros((), jnp.int32), ema_fast=z(),
+                        ema_slow=z(), gnorm_ema=z(), ln_tight=z(),
+                        ln_last=z(), g_ovf=z(), zeta=z(),
+                        cosine=jnp.ones((), jnp.float32), probe_age=z())
+
+
+def _ema(old, new, a, first):
+    new = jnp.where(jnp.isfinite(new), new, old)   # never poison the EMA
+    return jnp.where(first, new, (1.0 - a) * old + a * new)
+
+
+def _ln_clamp_means(params, qcfg: QuantConfig, match: str):
+    """Mean (tight_block_frac, last_bin_frac) over LN-affine leaves —
+    a scalar reduction of the Fig. 5 diagnostic (same leaf selection and
+    block semantics, by construction)."""
+    from repro.core import ln_clamp_stats
+    stats = ln_clamp_stats(params, qcfg, match=match)
+    if not stats:
+        return jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
+    mean_of = lambda key: jnp.mean(
+        jnp.stack([s[key] for s in stats.values()])).astype(jnp.float32)
+    return mean_of("tight_block_frac"), mean_of("last_bin_frac")
+
+
+def _grad_overflow(grads, qcfg: QuantConfig, max_leaves: int):
+    """Mean pre-clamp overflow fraction over the largest gradient leaves,
+    under the backward-pass element format (g_bwd, else a_fwd)."""
+    fmt = qcfg.g_bwd or qcfg.a_fwd
+    if fmt is None:
+        return jnp.zeros((), jnp.float32)
+    leaves = [l for l in jax.tree.leaves(grads) if l.ndim >= 1]
+    leaves = sorted(leaves, key=lambda l: -l.size)[:max_leaves]
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    fracs = [mx_stats(l.reshape(-1), fmt, axis=-1, block=qcfg.block,
+                      scale_mode=qcfg.scale_mode)["overflow_frac"]
+             for l in leaves]
+    return jnp.mean(jnp.stack(fracs)).astype(jnp.float32)
+
+
+def monitor_update(mcfg: MonitorConfig, state: MonitorState, *, step,
+                   loss, gnorm, grads, params, qcfg: QuantConfig,
+                   probe_fn: Optional[Callable] = None
+                   ) -> tuple:
+    """One in-jit monitor step -> (new_state, RiskSignals).
+
+    ``probe_fn() -> grads`` must return the fp32 reference gradient at the
+    same (params, batch); it is only *executed* on probe steps — the
+    ``lax.cond`` sits outside any vmap here, so XLA really skips it.
+    """
+    from repro.core import zeta_bound
+
+    loss = jnp.asarray(loss, jnp.float32)
+    gnorm = jnp.asarray(gnorm, jnp.float32)
+    first = state.count == 0
+    # instantaneous loss vs the *pre-update* trend: reacts one step after
+    # an excursion starts (the EMAs below lag by design)
+    lratio = jnp.where(first, 1.0,
+                       loss / jnp.maximum(state.ema_slow, 1e-30))
+    fast = _ema(state.ema_fast, loss, mcfg.ema_fast, first)
+    slow = _ema(state.ema_slow, loss, mcfg.ema_slow, first)
+    curvature = (fast - slow) / jnp.maximum(jnp.abs(slow), 1e-30)
+    gref = jnp.where(first, gnorm, state.gnorm_ema)
+    gratio = gnorm / jnp.maximum(gref, 1e-30)
+    gema = _ema(state.gnorm_ema, gnorm, mcfg.gnorm_ema, first)
+
+    if mcfg.probe_every > 0:
+        due = (jnp.asarray(step) % mcfg.probe_every) == 0
+
+        def probe():
+            lt, lb = _ln_clamp_means(params, qcfg, mcfg.ln_match)
+            ovf = _grad_overflow(grads, qcfg, mcfg.max_probe_leaves)
+            if mcfg.zeta_probe and probe_fn is not None \
+                    and not qcfg.is_noop:
+                zb = zeta_bound(probe_fn(), grads)
+                z = zb["norm_ratio"].astype(jnp.float32)
+                cs = zb["cosine"].astype(jnp.float32)
+            else:
+                z = jnp.zeros((), jnp.float32)
+                cs = jnp.ones((), jnp.float32)
+            return lt, lb, ovf, z, cs, jnp.zeros((), jnp.float32)
+
+        def hold():
+            return (state.ln_tight, state.ln_last, state.g_ovf, state.zeta,
+                    state.cosine, state.probe_age + 1.0)
+
+        lt, lb, ovf, z, cs, age = jax.lax.cond(due, probe, hold)
+    else:
+        lt, lb, ovf, z, cs = (state.ln_tight, state.ln_last, state.g_ovf,
+                              state.zeta, state.cosine)
+        age = state.probe_age + 1.0
+
+    new = MonitorState(count=state.count + 1, ema_fast=fast, ema_slow=slow,
+                       gnorm_ema=gema, ln_tight=lt, ln_last=lb, g_ovf=ovf,
+                       zeta=z, cosine=cs, probe_age=age)
+    sig = RiskSignals(loss_ema_fast=fast, loss_ema_slow=slow,
+                      loss_curvature=curvature, loss_ratio=lratio,
+                      gnorm_ratio=gratio,
+                      ln_tight_frac=lt, ln_last_bin=lb, grad_overflow=ovf,
+                      zeta=z, cosine=cs, probe_age=age)
+    return new, sig
+
+
+def signals_from_metrics(metrics: dict) -> dict:
+    """Pull the ``guard_*`` scalars a monitored train step merged into its
+    metrics back out as a {signal_name: float} dict (host side)."""
+    out = {}
+    for name in SIGNAL_NAMES:
+        v = metrics.get("guard_" + name)
+        if v is not None:
+            out[name] = float(v)
+    return out
+
+
+def host_signals(losses, gnorms, mcfg: Optional[MonitorConfig] = None
+                 ) -> dict:
+    """Host-side replica of the cheap channels over recorded histories.
+
+    ``losses``/``gnorms`` are (lanes, steps) arrays; returns a dict of
+    (lanes, steps) float64 arrays for the loss/grad-norm channels (probe
+    channels need in-jit access and are absent).  Lane ``i`` depends only
+    on lane ``i``'s history — `BatchedSpikeDetector`-style accounting, used
+    by the sweep engine to run guard policies *advisorily* over finished
+    lanes.  Non-finite inputs hold the EMA (as in :func:`monitor_update`)
+    but pass through to the ratio/curvature outputs, so a NaN step still
+    registers as a trigger.
+    """
+    import numpy as np
+    mcfg = mcfg or MonitorConfig()
+    losses = np.atleast_2d(np.asarray(losses, np.float64))
+    gnorms = np.atleast_2d(np.asarray(gnorms, np.float64))
+    L, T = losses.shape
+    fast = np.zeros((L, T)); slow = np.zeros((L, T))
+    curv = np.zeros((L, T)); gratio = np.zeros((L, T))
+    lratio = np.zeros((L, T))
+    ef = es = eg = None
+    for t in range(T):
+        lo, gn = losses[:, t], gnorms[:, t]
+        if t == 0:
+            ef = np.where(np.isfinite(lo), lo, 0.0)
+            es = ef.copy()
+            eg = np.where(np.isfinite(gn), gn, 0.0)
+            gr = np.where(np.isfinite(gn), 1.0, np.inf)
+            lr = np.ones(L)
+        else:
+            gr = gn / np.maximum(eg, 1e-30)
+            lr = lo / np.maximum(es, 1e-30)     # vs pre-update trend
+            ef = np.where(np.isfinite(lo),
+                          (1 - mcfg.ema_fast) * ef + mcfg.ema_fast * lo, ef)
+            es = np.where(np.isfinite(lo),
+                          (1 - mcfg.ema_slow) * es + mcfg.ema_slow * lo, es)
+            eg = np.where(np.isfinite(gn),
+                          (1 - mcfg.gnorm_ema) * eg + mcfg.gnorm_ema * gn,
+                          eg)
+        fast[:, t], slow[:, t] = ef, es
+        curv[:, t] = (ef - es) / np.maximum(np.abs(es), 1e-30)
+        # a non-finite loss must trip the loss channels too
+        curv[:, t] = np.where(np.isfinite(lo), curv[:, t], np.inf)
+        lratio[:, t] = np.where(np.isfinite(lo), lr, np.inf)
+        gratio[:, t] = gr
+    return {"loss_ema_fast": fast, "loss_ema_slow": slow,
+            "loss_curvature": curv, "loss_ratio": lratio,
+            "gnorm_ratio": gratio}

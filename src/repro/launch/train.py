@@ -3,7 +3,7 @@
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --variant smoke \
       --precision mxfp8_e4m3 --steps 200 --batch 8 --seq 128 \
       --ckpt-dir /tmp/run1 [--resume] [--auto-intervention bf16_activations] \
-      [--mesh 4,2] [--grad-accum 2] [--pod-compress e4m3]
+      [--guard autopilot] [--mesh 4,2] [--grad-accum 2] [--pod-compress e4m3]
 
 Runs the fault-tolerant Trainer (spike watchdog → rollback → precision
 intervention) on the selected architecture with the deterministic
@@ -36,6 +36,18 @@ def _parse_args(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--auto-intervention", default="bf16_activations")
+    ap.add_argument("--guard", default=None,
+                    help="precision-autopilot policy: a repro.guard preset "
+                         "(autopilot|aggressive|conservative) or a "
+                         "declarative schedule sched:STEP=LEVEL|NAME,... "
+                         "(first line of defense ahead of the recovery "
+                         "watchdog)")
+    ap.add_argument("--guard-probe-every", type=int, default=25,
+                    help="guard ζ-bound/LN-clamp probe stride in steps "
+                         "(0 disables the probes; cheap channels stay on)")
+    ap.add_argument("--guard-journal", default=None,
+                    help="write the guard transition journal to this JSONL "
+                         "path at exit (CI artifact)")
     ap.add_argument("--log-jsonl", default=None)
     ap.add_argument("--log-every", type=int, default=50,
                     help="host-sync/log window (steps); metrics stay "
@@ -94,7 +106,9 @@ def main(argv=None):
                          auto_intervention=args.auto_intervention,
                          log_every=args.log_every,
                          grad_accum=args.grad_accum,
-                         pod_compression=args.pod_compress)
+                         pod_compression=args.pod_compress,
+                         guard=args.guard,
+                         guard_probe_every=args.guard_probe_every)
     trainer = Trainer(
         loss_fn=lambda p, b, q: lm_loss(p, b, cfg, q),
         params=params, qcfg=qcfg,
@@ -113,6 +127,14 @@ def main(argv=None):
               f"gnorm {rec['grad_norm']:.3f} {rec['time_s']*1e3:.0f}ms")
     if trainer.events:
         print("[train] events:", json.dumps(trainer.events, indent=1))
+    if trainer._controller is not None:
+        print(f"[train] guard: level {trainer._controller.level}, "
+              f"{len(trainer._controller.journal)} transition(s), final "
+              f"precision {trainer.qcfg.describe()}")
+        if args.guard_journal:
+            with open(args.guard_journal, "w") as f:
+                for rec in trainer._controller.journal:
+                    f.write(json.dumps(rec) + "\n")
     if args.log_jsonl:
         with open(args.log_jsonl, "w") as f:
             for rec in hist:

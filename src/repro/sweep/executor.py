@@ -22,6 +22,14 @@ Two paths behind one entry point (:func:`run_sweep`):
 Mid-run precision interventions (``RunSpec.phases``) split the scan at the
 switch steps; each segment compiles with its own static QuantConfig,
 mirroring how the paper's Fig. 7 experiments recompile on a scheme swap.
+``RunSpec.guard`` rides the same machinery: *scheduled* guard policies
+compile into the phase segments (levels are absolute ladder positions of
+the base scheme), while *online* policies run the real autopilot on
+``kind="lm"`` runs and advisorily (post-hoc per-lane journals over the
+recorded histories) on vectorized packs — a mid-scan transition would
+break lane packing.  Journals persist with the run summary so
+``stats.aggregate`` can report divergence-averted rates and
+time-of-intervention.
 
 Per-lane accounting is host-side after the single device→host transfer:
 :class:`repro.core.BatchedSpikeDetector` flags (one independent detector
@@ -66,6 +74,14 @@ class RunResult:
     zeta_steps: list = dataclasses.field(default_factory=list)
     zeta: list = dataclasses.field(default_factory=list)
     cosine: list = dataclasses.field(default_factory=list)
+    # guard accounting (persisted to the run DB so aggregates can report
+    # divergence-averted rates and time-of-intervention).  The journal
+    # holds guard_transition records: *actual* transitions for lm runs and
+    # scheduled policies, *advisory* ("would-have-intervened") ones for
+    # online policies over vectorized proxy lanes.
+    guard_journal: list = dataclasses.field(default_factory=list)
+    guard_trigger_step: int = -1      # first escalation (advisory or real)
+    guard_advisory: bool = False
     # in-memory only (never persisted to the run DB)
     history: Optional[Dict[str, list]] = None
     final_params: Any = None
@@ -108,11 +124,19 @@ def _diverge_step(losses: np.ndarray, factor: float) -> int:
     return -1
 
 
+def _guard_trigger(journal) -> int:
+    for t in journal or ():
+        if t.get("kind") in ("escalate", "scheduled"):
+            return int(t["step"])
+    return -1
+
+
 def _account(r: RunSpec, losses: np.ndarray, gnorms: np.ndarray,
              spike_flags: np.ndarray, us_per_step: float,
              zeta_steps=(), zeta=(), cosine=(),
              history: Optional[dict] = None,
-             final_params=None) -> RunResult:
+             final_params=None, guard_journal=None,
+             guard_advisory: bool = False) -> RunResult:
     finite = losses[np.isfinite(losses)]
     last = float(losses[-1]) if len(losses) else float("nan")
     min_loss = float(finite.min()) if len(finite) else float("nan")
@@ -130,6 +154,9 @@ def _account(r: RunSpec, losses: np.ndarray, gnorms: np.ndarray,
         if len(losses) else -1,
         us_per_step=float(us_per_step),
         zeta_steps=list(zeta_steps), zeta=list(zeta), cosine=list(cosine),
+        guard_journal=list(guard_journal or ()),
+        guard_trigger_step=_guard_trigger(guard_journal),
+        guard_advisory=bool(guard_advisory),
         history=history, final_params=final_params)
 
 
@@ -147,18 +174,72 @@ def _spike_flags(losses_2d: np.ndarray, r: RunSpec) -> np.ndarray:
 # vectorized proxy engine
 # ---------------------------------------------------------------------------
 def _phase_segments(r: RunSpec, qcfg0):
-    """[(start, end, qcfg)] step segments from the intervention schedule."""
+    """[(start, end, qcfg)] step segments from the intervention schedule.
+
+    Merges ``r.phases`` with a *scheduled* guard policy (``r.guard``):
+    scheduled policies compile into the same phase-split scan — string
+    entries apply cumulatively like phases, integer entries jump to an
+    absolute ladder level of the base scheme.  Online guard policies do
+    not alter the segments (they run advisorily, see `_advisory_guard`).
+    """
     from repro.core import apply_intervention
+    switches = [(int(s), iv) for s, iv in r.phases]
+    ctl = None
+    if r.guard:
+        from repro.guard import PrecisionController, get_policy
+        pol = get_policy(r.guard)
+        if pol.is_scheduled:
+            ctl = PrecisionController(qcfg0, pol)
+            switches += [(int(s), w) for s, w in pol.schedule]
     segs, qcfg, prev = [], qcfg0, 0
-    for step, iv in sorted(r.phases):
+    for step, what in sorted(switches, key=lambda x: (x[0],
+                                                      str(x[1]))):
         step = int(np.clip(step, 0, r.steps))
         if step > prev:
             segs.append((prev, step, qcfg))
             prev = step
-        qcfg = apply_intervention(qcfg, iv)
+        if isinstance(what, str):
+            qcfg = apply_intervention(qcfg, what)
+        else:
+            qcfg = ctl.qcfg_at_level(what)
     if prev < r.steps:
         segs.append((prev, r.steps, qcfg))
     return segs or [(0, r.steps, qcfg0)]
+
+
+def _scheduled_journal(r: RunSpec) -> Optional[list]:
+    """The transition journal of a *scheduled* guard policy: the schedule
+    itself, walked through a controller (identical across lanes/engines
+    because scheduled decisions ignore signals).  None when r.guard is
+    empty or online."""
+    if not r.guard:
+        return None
+    from repro.core import preset
+    from repro.guard import PrecisionController, get_policy
+    pol = get_policy(r.guard)
+    if not pol.is_scheduled:
+        return None
+    ctl = PrecisionController(preset(r.scheme), pol)
+    for s, _ in pol.schedule:
+        if s < r.steps:
+            ctl.observe(s, {}, effective_step=s)
+    return ctl.journal
+
+
+def _advisory_guard(r: RunSpec, losses_2d: np.ndarray, gnorms_2d: np.ndarray
+                    ) -> Optional[list]:
+    """Per-lane advisory guard accounting for an *online* policy over a
+    vectorized pack: (lanes, steps) histories -> one would-have-intervened
+    journal per lane (`BatchedSpikeDetector`-style: lane i sees only lane
+    i's history).  Returns None when r.guard is empty or scheduled."""
+    if not r.guard:
+        return None
+    from repro.core import preset
+    from repro.guard import advisory_journals, get_policy
+    pol = get_policy(r.guard)
+    if pol.is_scheduled:
+        return None
+    return advisory_journals(losses_2d, gnorms_2d, pol, preset(r.scheme))
 
 
 def _pad_lanes(n: int, mesh) -> int:
@@ -281,6 +362,10 @@ def _run_proxy_pack(runs: List[RunSpec], mesh=None,
     us = wall / max(r0.steps, 1) * 1e6   # pack-level: lanes ran together
 
     flags = _spike_flags(losses, r0)
+    adv = _advisory_guard(r0, losses, gnorms)
+    # scheduled policies were compiled into the segments above; their
+    # journal is the schedule itself (identical across lanes)
+    sched_journal = _scheduled_journal(r0)
     out = []
     for i, r in enumerate(runs):
         zsteps = list(range(0, r.steps, track)) if track else []
@@ -296,7 +381,9 @@ def _run_proxy_pack(runs: List[RunSpec], mesh=None,
             r, losses[i], gnorms[i], flags[i], us,
             zsteps, [float(zetas[i][s]) for s in zsteps] if track else [],
             [float(coss[i][s]) for s in zsteps] if track else [],
-            history=hist, final_params=fp))
+            history=hist, final_params=fp,
+            guard_journal=adv[i] if adv is not None else sched_journal,
+            guard_advisory=adv is not None))
     return out
 
 
@@ -319,7 +406,7 @@ def _run_lm_run(r: RunSpec, mesh=None, keep_history: bool = False,
                 keep_params: bool = False) -> RunResult:
     import jax
 
-    from repro.core import apply_intervention, preset
+    from repro.core import preset
     from repro.data.synthetic import lm_input_arrays
     from repro.models import lm_init, lm_loss
     from repro.optim import AdamWConfig
@@ -331,7 +418,16 @@ def _run_lm_run(r: RunSpec, mesh=None, keep_history: bool = False,
             f"(got optimizer={r.optimizer!r})")
     if r.track_bias_every:
         raise ValueError("track_bias_every is proxy-only (the Trainer "
-                         "does not recompute fp32 gradients per step)")
+                         "does not recompute fp32 gradients per step; use "
+                         "guard_probe_every for in-Trainer ζ probes)")
+    if r.guard and r.phases:
+        from repro.guard import get_policy as _gp
+        if not _gp(r.guard).is_scheduled:
+            raise ValueError(
+                "an online guard policy owns the trainer's qcfg, which "
+                "would fight the phases' segment switches — express the "
+                "schedule as part of a sched: guard policy instead of "
+                "mixing an online guard with phases")
     cfg = lm_config(r)
     from repro.optim import get_schedule
     get_schedule(r.lr_schedule)   # reject unknown names up front
@@ -346,30 +442,38 @@ def _run_lm_run(r: RunSpec, mesh=None, keep_history: bool = False,
     # Recovery machinery off: a sweep characterizes instabilities, it must
     # not auto-intervene on them.  A non-finite loss still aborts the run
     # (max_recoveries=0), which is exactly "this run diverged".
+    from repro.guard import get_policy
+    pol = get_policy(r.guard) if r.guard else None
+    online = pol is not None and not pol.is_scheduled
     tcfg = TrainerConfig(
         total_steps=r.steps, peak_lr=peak, init_lr=init, end_lr=end,
         auto_intervention=None, max_recoveries=0,
         spike_factor=float("inf"), grad_factor=float("inf"),
-        log_every=min(50, max(r.steps, 1)))
+        # only an *online* guard needs per-step drains (signal-driven
+        # control); scheduled policies compile into segments below and
+        # keep the one-host-sync-per-window discipline
+        log_every=1 if online else min(50, max(r.steps, 1)),
+        guard=r.guard if online else None,
+        guard_probe_every=r.guard_probe_every)
+    # phases and scheduled guard policies share the segment walk of the
+    # vectorized engine: exact-step switches, one compile per segment
+    segs = _phase_segments(r, preset(r.scheme))
     trainer = Trainer(
         loss_fn=lambda p, b, q: lm_loss(p, b, cfg, q),
         params=lm_init(jax.random.PRNGKey(r.seed), cfg),
-        qcfg=preset(r.scheme),
+        qcfg=segs[0][2],
         batch_fn=lambda s: lm_input_arrays(s, cfg, r.lm_batch, r.lm_seq,
                                            r.effective_data_seed),
         opt_cfg=AdamWConfig(weight_decay=r.weight_decay,
                             grad_clip=r.grad_clip),
         tcfg=tcfg, mesh=mesh)
     t0 = time.perf_counter()
-    prev = 0
-    for step, iv in sorted(r.phases) + [(r.steps, None)]:
-        step = int(np.clip(step, 0, r.steps))
-        if step > prev and trainer.step < step:
-            trainer.run(step - trainer.step)
-            prev = step
-        if iv is not None:
-            trainer.qcfg = apply_intervention(trainer.qcfg, iv)
-        if len(trainer.history) < prev:   # aborted (non-finite loss)
+    for _, end_step, qcfg_seg in segs:
+        if not online:
+            trainer.qcfg = qcfg_seg
+        if trainer.step < end_step:
+            trainer.run(end_step - trainer.step)
+        if len(trainer.history) < min(end_step, r.steps):   # aborted
             break
     wall = time.perf_counter() - t0
 
@@ -382,9 +486,12 @@ def _run_lm_run(r: RunSpec, mesh=None, keep_history: bool = False,
     if keep_history:
         hist = {"loss": losses.tolist(), "grad_norm": gnorms.tolist(),
                 "spike_flags": flags.tolist()}
+    journal = (list(trainer._controller.journal) if online
+               else _scheduled_journal(r))
     return _account(r, losses, gnorms, flags,
                     wall / max(len(losses), 1) * 1e6, history=hist,
-                    final_params=trainer.params if keep_params else None)
+                    final_params=trainer.params if keep_params else None,
+                    guard_journal=journal)
 
 
 # ---------------------------------------------------------------------------

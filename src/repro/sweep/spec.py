@@ -76,6 +76,13 @@ class RunSpec:
     # mid-run precision interventions: ((switch_step, intervention), ...)
     # applied in step order to the *base* scheme (paper Fig. 7)
     phases: Tuple[Tuple[int, str], ...] = ()
+    # guard policy (repro.guard.get_policy name / "sched:..." spec; "" = off).
+    # Scheduled policies compile into the phase-split scan exactly like
+    # `phases`; online policies run the real autopilot on `kind="lm"` runs
+    # and *advisorily* (post-hoc per-lane accounting) on vectorized proxy
+    # packs, where a mid-scan recompile would break lane packing.
+    guard: str = ""
+    guard_probe_every: int = 0        # lm-only: guard ζ/clamp probe stride
     # diagnostics
     track_bias_every: int = 0         # ζ-bound probe stride (0 = off)
     spike_factor: float = 10.0        # App. B loss-spike threshold

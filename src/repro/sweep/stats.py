@@ -53,6 +53,26 @@ def aggregate(src: Union[SweepReport, RunDB, list], by: str = "label"
                 [r.max_gnorm for r in rs])),
             "us_per_step": float(np.mean([r.us_per_step for r in rs])),
         }
+        guarded = [r for r in rs if r.guard_journal]
+        if guarded:
+            # guard accounting (from the persisted transition journals):
+            # a run is "averted" when the guard intervened and the run
+            # still converged — divergence-averted rate + median step of
+            # the first intervention (advisory lanes count separately)
+            trig = [r.guard_trigger_step for r in guarded
+                    if r.guard_trigger_step >= 0]
+            out[key].update({
+                "guarded": len(guarded),
+                "advisory": int(sum(r.guard_advisory for r in guarded)),
+                "averted": int(sum((not r.divergent)
+                                   and r.guard_trigger_step >= 0
+                                   and not r.guard_advisory
+                                   for r in guarded)),
+                "guard_transitions": int(sum(len(r.guard_journal)
+                                             for r in guarded)),
+                "median_trigger_step": float(np.median(trig))
+                if trig else -1.0,
+            })
     return out
 
 

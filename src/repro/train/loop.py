@@ -2,9 +2,21 @@
 
 The paper shows (Fig. 7) that an impending MX divergence can be averted by
 switching the precision scheme mid-training *before* the loss blows up.
-This loop operationalizes that as a fault-tolerance policy:
+This loop operationalizes that as a two-tier fault-tolerance policy:
 
-  1. watchdog: SpikeDetector on loss + gradient norm (App. B heuristic);
+  0. **autopilot (first line)**: with ``TrainerConfig.guard`` set, a
+     `repro.guard.PrecisionController` watches in-jit risk signals
+     (loss-EMA curvature, grad-norm ratio, and lax.cond-gated ζ-bound /
+     LN-clamp probes — see guard/monitors.py) and escalates the precision
+     scheme *before* the spike heuristic would fire; after a stability
+     window it de-escalates back toward MX to recover throughput.  Every
+     transition is journaled as a ``guard_transition`` event (with
+     ``qcfg.describe()`` before/after) and persisted in checkpoint meta,
+     so resumes adopt the autopilot state and the journaled schedule
+     replays the run bitwise.  Transitions take effect at metric-drain
+     boundaries (per step when ``log_every=1``);
+  1. watchdog (last line): SpikeDetector on loss + gradient norm
+     (App. B heuristic);
   2. on trigger: roll back to the last good checkpoint (async, versioned);
   3. apply the configured intervention (default: "bf16_activations", the
      paper's strongest immediate stabilizer) — this swaps the static
@@ -76,6 +88,11 @@ class TrainerConfig:
     grad_factor: float = 50.0
     auto_intervention: Optional[str] = "bf16_activations"
     max_recoveries: int = 3
+    # precision autopilot (first line of defense; repro.guard).  A policy
+    # preset name ("autopilot", "aggressive", ..., or "sched:STEP=..."),
+    # or a GuardPolicy instance.  None disables the controller.
+    guard: Optional[Any] = None
+    guard_probe_every: int = 25       # ζ/clamp probe stride (0 = off)
     # straggler monitor
     straggler_factor: float = 3.0
     log_every: int = 50
@@ -99,10 +116,17 @@ def _microbatched(batch, n: int, what: str = "grad_accum"):
 
 def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig,
                     tcfg: TrainerConfig, mesh=None, param_specs=None,
-                    opt_specs=None, batch_specs=None):
+                    opt_specs=None, batch_specs=None, monitors=None):
     """loss_fn(params, batch, qcfg) -> (loss, metrics).  Returns a function
     (params, opt_state, batch, step, qcfg[static]) -> (params, opt_state,
     metrics), jitted with qcfg static so interventions recompile cleanly.
+
+    With ``monitors`` (a `repro.guard.MonitorConfig`) the step instead has
+    signature (params, opt_state, mon_state, batch, step, qcfg) ->
+    (params, opt_state, mon_state, metrics): guard risk signals are
+    computed in-jit every step and merged into metrics under ``guard_*``
+    keys; the ζ-bound probe (an extra fp32 backward) runs only on probe
+    steps behind a `lax.cond`.
 
     With ``mesh`` the step is jitted with explicit in/out shardings built
     from the given PartitionSpec trees; a "pod" mesh axis additionally
@@ -200,7 +224,7 @@ def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig,
     else:
         fwd_bwd = grads_of
 
-    def step_fn(params, opt_state, batch, step, qcfg: QuantConfig):
+    def update(params, opt_state, batch, step, qcfg: QuantConfig):
         loss, metrics, grads = fwd_bwd(params, batch, qcfg)
         lr = warmup_cosine(step, tcfg.total_steps, tcfg.peak_lr, tcfg.init_lr,
                            tcfg.end_lr, tcfg.warmup_frac)
@@ -209,18 +233,53 @@ def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig,
         metrics.update(om)
         metrics["lr"] = lr
         metrics["loss"] = loss
-        return params, opt_state, metrics
+        return params, opt_state, metrics, grads
+
+    if monitors is None:
+        def step_fn(params, opt_state, batch, step, qcfg: QuantConfig):
+            params, opt_state, metrics, _ = update(params, opt_state, batch,
+                                                   step, qcfg)
+            return params, opt_state, metrics
+        static, donate = (4,), (0, 1)
+        shapes = lambda pl, ol, bl, rep: (
+            ((pl, ol, bl, rep), (pl, ol, rep)))
+    else:
+        from repro.guard import monitor_init, monitor_update
+
+        def step_fn(params, opt_state, mstate, batch, step,
+                    qcfg: QuantConfig):
+            # the monitor reads the *pre-update* params (LN clamp stats
+            # describe the weights the step just trained with), so keep a
+            # reference before adamw_update consumes the donated buffers
+            p_in = params
+            params, opt_state, metrics, grads = update(params, opt_state,
+                                                       batch, step, qcfg)
+            # fp32 reference backward for the ζ probe; only *executed* on
+            # probe steps (the lax.cond lives inside monitor_update)
+            probe = lambda: fwd_bwd(p_in, batch, qcfg.to_fp32())[2]
+            mstate, sig = monitor_update(
+                monitors, mstate, step=step, loss=metrics["loss"],
+                gnorm=metrics["grad_norm"], grads=grads, params=p_in,
+                qcfg=qcfg, probe_fn=probe)
+            for name, v in sig._asdict().items():
+                metrics["guard_" + name] = v
+            return params, opt_state, mstate, metrics
+        static, donate = (5,), (0, 1, 2)
+        mrep = lambda rep: jax.tree.map(lambda _: rep,
+                                        monitor_init(monitors))
+        shapes = lambda pl, ol, bl, rep: (
+            ((pl, ol, mrep(rep), bl, rep), (pl, ol, mrep(rep), rep)))
 
     if mesh is None:
-        return jax.jit(step_fn, static_argnums=(4,), donate_argnums=(0, 1))
+        return jax.jit(step_fn, static_argnums=static, donate_argnums=donate)
     like = lambda specs: jax.tree.map(
         lambda s: NamedSharding(mesh, s), specs,
         is_leaf=lambda x: isinstance(x, P))
     rep = NamedSharding(mesh, P())
-    return jax.jit(step_fn, static_argnums=(4,), donate_argnums=(0, 1),
-                   in_shardings=(like(param_specs), like(opt_specs),
-                                 like(batch_specs), rep),
-                   out_shardings=(like(param_specs), like(opt_specs), rep))
+    ins, outs = shapes(like(param_specs), like(opt_specs),
+                       like(batch_specs), rep)
+    return jax.jit(step_fn, static_argnums=static, donate_argnums=donate,
+                   in_shardings=ins, out_shardings=outs)
 
 
 class Trainer:
@@ -259,9 +318,22 @@ class Trainer:
                 self.params, shardings_like(self._pspecs, mesh))
             self.opt_state = jax.device_put(
                 self.opt_state, shardings_like(self._ospecs, mesh))
+        self._controller = self._mcfg = self._mstate = None
+        if self.tcfg.guard is not None:
+            from repro.guard import (MonitorConfig, PrecisionController,
+                                     get_policy, monitor_init)
+            policy = get_policy(self.tcfg.guard)
+            self._controller = PrecisionController(qcfg, policy)
+            if not policy.is_scheduled:
+                # scheduled policies ignore signals entirely — don't pay
+                # for in-jit monitors (or the periodic fp32 ζ backward)
+                # that decide() would discard
+                self._mcfg = MonitorConfig(
+                    probe_every=max(0, self.tcfg.guard_probe_every))
+                self._mstate = monitor_init(self._mcfg)
         self._step_fn = make_train_step(loss_fn, self.opt_cfg, self.tcfg,
                                         mesh, self._pspecs, self._ospecs,
-                                        self._bspecs)
+                                        self._bspecs, monitors=self._mcfg)
         self.history: List[Dict[str, float]] = []
         self.events: List[Dict[str, Any]] = []
         self._ckptr = None
@@ -286,11 +358,15 @@ class Trainer:
 
     def checkpoint(self):
         if self._ckptr:
-            self._ckptr.save(self.step, self._tree(),
-                             {"step": self.step,
-                              "qcfg": self.qcfg.describe(),
-                              "qcfg_dict": self.qcfg.to_dict(),
-                              "recoveries": self._recoveries})
+            meta = {"step": self.step,
+                    "qcfg": self.qcfg.describe(),
+                    "qcfg_dict": self.qcfg.to_dict(),
+                    "recoveries": self._recoveries}
+            if self._controller is not None:
+                # autopilot state rides checkpoint meta so a resume picks
+                # up mid-flight (level, hysteresis counters, journal)
+                meta["guard"] = self._controller.state_dict()
+            self._ckptr.save(self.step, self._tree(), meta)
 
     def restore(self, step: Optional[int] = None,
                 adopt_meta: bool = True) -> bool:
@@ -332,6 +408,18 @@ class Trainer:
                         "from_qcfg": self.qcfg.describe(),
                         "to_qcfg": saved_qcfg.describe()})
                     self.qcfg = saved_qcfg
+            if self._controller is not None:
+                if meta.get("guard"):
+                    self._controller.load_state_dict(meta["guard"])
+                    self.events.append({
+                        "step": s, "event": "guard_restored",
+                        "level": self._controller.level,
+                        "transitions": len(self._controller.journal),
+                        "qcfg": self._controller.qcfg.describe()})
+                elif self._controller.qcfg != self.qcfg:
+                    # pre-guard checkpoint: adopt the restored scheme as
+                    # the controller's baseline instead of desyncing
+                    self._controller.rebase(self.qcfg)
         return True
 
     # ---- recovery policy --------------------------------------------------
@@ -348,9 +436,18 @@ class Trainer:
             # switch without rollback) still stabilizes per Fig. 7.
             self.qcfg = apply_intervention(self.qcfg,
                                            self.tcfg.auto_intervention)
+            if self._controller is not None:
+                # the recovery's scheme is the new floor: without a rebase
+                # the controller's next transition would recompute from its
+                # stale base and silently revert this intervention
+                self._controller.rebase(self.qcfg)
         self._recoveries += 1
         self.detector = SpikeDetector(self.tcfg.spike_factor,
                                       self.tcfg.grad_factor)
+        if self._mcfg is not None:
+            # monitor EMAs describe the poisoned trajectory — restart them
+            from repro.guard import monitor_init
+            self._mstate = monitor_init(self._mcfg)
         self.events.append({
             "step": self.step, "event": "recovery", "reason": reason,
             "rolled_back": rolled, "from_qcfg": old,
@@ -358,6 +455,27 @@ class Trainer:
         return rolled
 
     # ---- metric window ----------------------------------------------------
+    def _guard_pass(self, pending) -> bool:
+        """Feed the window's risk signals to the autopilot — the *first*
+        line of defense, evaluated before the spike watchdog sees the
+        window.  At most one transition per window; the new scheme takes
+        effect at ``self.step`` (the next step to execute), which is the
+        step the journal records — a scheduled replay therefore switches
+        at exactly the same boundary, bitwise.  Guard transitions survive
+        a subsequent rollback (forward-fix semantics, like `_recover`)."""
+        if self._controller is None:
+            return False
+        from repro.guard import signals_from_metrics
+        for s, metrics, _ in pending:
+            sig = signals_from_metrics(metrics)
+            new = self._controller.observe(s, sig,
+                                           effective_step=self.step)
+            if new is not None:
+                self.events.append(dict(self._controller.journal[-1]))
+                self.qcfg = new
+                return True
+        return False
+
     def _drain(self, pending) -> tuple:
         """Record a window of (step, metrics, time_s) entries: append
         history, feed the watchdog per step in order.  Stops at the first
@@ -375,6 +493,10 @@ class Trainer:
             if "compression_error" in metrics:
                 rec["compression_error"] = float(
                     metrics["compression_error"])
+            for k in ("guard_zeta", "guard_gnorm_ratio", "guard_loss_ratio",
+                      "guard_loss_curvature"):
+                if k in metrics:
+                    rec[k] = float(metrics[k])
             if dt > self.tcfg.straggler_factor * med and len(
                     self._step_times) > 8:
                 self.events.append({"step": s, "event": "straggler",
@@ -397,6 +519,8 @@ class Trainer:
                                 "fused_gemms": self._fused_gemms,
                                 "mesh": dict(self.mesh.shape)
                                 if self.mesh is not None else None,
+                                "guard": self._controller.policy.name
+                                if self._controller is not None else None,
                                 "qcfg": self.qcfg.describe()})
         # n_steps=0 must mean "nothing to do" (e.g. --resume of a finished
         # run), not "default to total_steps"
@@ -415,9 +539,15 @@ class Trainer:
                 batch = self.batch_fn(self.step)
                 if self._bshard is not None:
                     batch = jax.device_put(batch, self._bshard)
-                self.params, self.opt_state, metrics = self._step_fn(
-                    self.params, self.opt_state, batch,
-                    jnp.asarray(self.step), self.qcfg)
+                if self._mcfg is None:
+                    self.params, self.opt_state, metrics = self._step_fn(
+                        self.params, self.opt_state, batch,
+                        jnp.asarray(self.step), self.qcfg)
+                else:
+                    (self.params, self.opt_state, self._mstate,
+                     metrics) = self._step_fn(
+                        self.params, self.opt_state, self._mstate, batch,
+                        jnp.asarray(self.step), self.qcfg)
                 pending.append((self.step, metrics))
                 self.step += 1
                 at_ckpt = bool(self._ckptr) \
@@ -432,6 +562,7 @@ class Trainer:
                 jax.block_until_ready(pending[-1][1]["loss"])
                 per = (time.monotonic() - win_t0) / len(pending)
                 pending = [(s, m, per) for s, m in pending]
+                self._guard_pass(pending)
                 recovered = False
                 while pending:
                     spike, consumed = self._drain(pending)

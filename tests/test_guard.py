@@ -1,0 +1,424 @@
+"""repro.guard: monitors, policy engine, PrecisionController, and the
+autopilot wired through the Trainer and the sweep engine.
+
+The end-to-end acceptance test uses the deterministic instability
+injector from benchmarks/guard_autopilot.py: a compounding loss
+amplification active only while activations are quantized (the paper's
+bias mechanism made step-exact — CPU-scale proxies do not diverge
+organically inside test budgets, see fig7_interventions.py)."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (QuantConfig, apply_intervention, list_interventions,
+                        list_presets, preset)
+from repro.guard import (GuardPolicy, MonitorConfig, PolicyState,
+                         PrecisionController, Rule, advisory_journals,
+                         decide, get_policy, monitor_init, monitor_update,
+                         schedule_from_journal, scheduled_policy)
+from repro.train import Trainer, TrainerConfig
+
+from benchmarks.guard_autopilot import _scenario, _trainer, _trend_policy
+
+
+# ---------------------------------------------------------------------------
+# satellites: registry listings (core.qconfig)
+# ---------------------------------------------------------------------------
+def test_list_presets_and_interventions():
+    assert "mxfp8_e4m3" in list_presets()
+    assert "bf16_activations" in list_interventions()
+    assert list_presets() == sorted(list_presets())
+    with pytest.raises(KeyError, match="mxfp8_e4m3"):
+        preset("not-a-preset")           # error enumerates the registry
+    with pytest.raises(KeyError, match="bf16_activations"):
+        apply_intervention(QuantConfig.bf16(), "not-an-intervention")
+
+
+# ---------------------------------------------------------------------------
+# monitors
+# ---------------------------------------------------------------------------
+def test_monitor_probe_gating_holds_values_between_probes():
+    """ζ/clamp probe channels update only on probe steps and hold (with
+    probe_age counting up) in between."""
+    from repro.models.proxy import (ProxyConfig, proxy_batch, proxy_init,
+                                    proxy_loss, teacher_init)
+    mcfg = MonitorConfig(probe_every=4)
+    qcfg = preset("mxfp4_e2m1")
+    cfg = ProxyConfig(d_model=32, n_layers=2, batch_size=32)
+    params = proxy_init(jax.random.PRNGKey(0), cfg)
+    teacher = teacher_init(jax.random.PRNGKey(1), cfg)
+
+    @jax.jit
+    def one(state, step):
+        batch = proxy_batch(step, teacher, cfg)
+        loss, grads = jax.value_and_grad(
+            lambda p: proxy_loss(p, batch, cfg, qcfg)[0])(params)
+        gn = jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree.leaves(grads)))
+        probe = lambda: jax.grad(
+            lambda p: proxy_loss(p, batch, cfg, qcfg.to_fp32())[0])(params)
+        return monitor_update(mcfg, state, step=step, loss=loss, gnorm=gn,
+                              grads=grads, params=params, qcfg=qcfg,
+                              probe_fn=probe)
+
+    state = monitor_init(mcfg)
+    zetas, ages = [], []
+    for s in range(9):
+        state, sig = one(state, s)
+        zetas.append(float(sig.zeta))
+        ages.append(float(sig.probe_age))
+    assert ages == [0, 1, 2, 3, 0, 1, 2, 3, 0]
+    assert zetas[0] > 0                        # measured on the first probe
+    assert zetas[0] == zetas[1] == zetas[2] == zetas[3]   # held
+    assert zetas[4] != zetas[0]                # fresh batch -> fresh probe
+    assert zetas[4] == zetas[5] == zetas[6] == zetas[7]
+
+
+def test_monitor_ema_never_poisoned_by_nonfinite():
+    mcfg = MonitorConfig(probe_every=0)
+    state = monitor_init(mcfg)
+    grads = params = {"w": jnp.ones((4,))}
+    for loss in (1.0, 1.0, float("nan"), 1.0):
+        state, sig = monitor_update(
+            mcfg, state, step=0, loss=jnp.float32(loss),
+            gnorm=jnp.float32(1.0), grads=grads, params=params,
+            qcfg=preset("bf16"))
+    assert np.isfinite(float(state.ema_fast))
+    assert float(state.ema_fast) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# policy engine
+# ---------------------------------------------------------------------------
+def test_policy_escalates_and_deescalates_with_hysteresis():
+    pol = GuardPolicy(rules=(Rule("gnorm_ratio", 4.0, calm=2.0),),
+                      cooldown=2, stability_window=3)
+    st, log = PolicyState(), []
+    trace = [1, 1, 9, 9, 1, 1, 1, 1, 1, 1, 1]
+    for t, v in enumerate(trace):
+        st, dec = decide(pol, st, t, {"gnorm_ratio": float(v)})
+        if dec:
+            log.append((t, dec.kind))
+    assert log[0] == (2, "escalate")
+    # 3.0 sits between calm (2.0) and threshold (4.0): neither fires nor
+    # counts as calm -> no de-escalation, ever
+    st2 = PolicyState(level=1, last_step=-100)
+    for t in range(50):
+        st2, dec = decide(pol, st2, t, {"gnorm_ratio": 3.0})
+        assert dec is None
+    # full calm de-escalates after the stability window
+    assert any(k == "deescalate" for _, k in log)
+
+
+def test_policy_unknown_ladder_name_lists_registry():
+    with pytest.raises(KeyError, match="bf16_activations"):
+        GuardPolicy(ladder=("nonsense",))
+    with pytest.raises(KeyError, match="bf16_activations"):
+        scheduled_policy(((10, "nonsense"),))
+
+
+def test_get_policy_presets_and_sched_spec():
+    assert get_policy("autopilot").rules
+    p = get_policy("sched:40=bf16_activations,120=0")
+    assert p.is_scheduled
+    assert p.schedule == ((40, "bf16_activations"), (120, 0))
+    with pytest.raises(KeyError, match="autopilot"):
+        get_policy("not-a-policy")
+    pol = get_policy("aggressive")
+    assert get_policy(pol) is pol              # pass-through
+
+
+def test_policy_json_roundtrip():
+    pol = get_policy("autopilot")
+    back = GuardPolicy.from_dict(json.loads(json.dumps(pol.to_dict())))
+    assert back == pol
+    sp = scheduled_policy(((5, "fp32"), (9, 1)))
+    assert GuardPolicy.from_dict(
+        json.loads(json.dumps(sp.to_dict()))) == sp
+
+
+# ---------------------------------------------------------------------------
+# controller
+# ---------------------------------------------------------------------------
+def test_controller_ladder_is_cumulative_and_journal_describes():
+    base = preset("mxfp4_e2m1")
+    ctl = PrecisionController(base, get_policy("aggressive"))
+    q1 = ctl.qcfg_at_level(1)
+    assert q1 == base.with_bf16_activations()
+    q2 = ctl.qcfg_at_level(2)
+    assert q2 == base.with_bf16_activations().without_ln_quant()
+    assert ctl.qcfg_at_level(4) == apply_intervention(
+        ctl.qcfg_at_level(3), "fp32")
+
+    new = ctl.observe(7, {"gnorm_ratio": 100.0})
+    assert new == q1 and ctl.level == 1
+    rec = ctl.journal[-1]
+    assert rec["event"] == "guard_transition"
+    assert rec["from_qcfg"] == base.describe()
+    assert rec["to_qcfg"] == q1.describe()     # qcfg.describe() before/after
+    assert rec["rule"] == "gnorm_ratio"
+
+
+def test_controller_state_dict_roundtrip_and_schedule():
+    base = preset("mxfp4_e2m1")
+    ctl = PrecisionController(base, get_policy("aggressive"))
+    ctl.observe(3, {"gnorm_ratio": 50.0}, effective_step=4)
+    blob = json.loads(json.dumps(ctl.state_dict()))
+    ctl2 = PrecisionController(base, get_policy("aggressive"))
+    ctl2.load_state_dict(blob)
+    assert ctl2.qcfg == ctl.qcfg and ctl2.state == ctl.state
+    assert ctl2.journal == ctl.journal
+    assert ctl.schedule() == ((4, 1),)
+    assert schedule_from_journal(ctl.journal) == ((4, 1),)
+
+
+def test_advisory_journals_per_lane_independent():
+    losses = np.ones((2, 60))
+    losses[1, 30:] = np.cumprod(np.full(30, 1.5))   # lane 1 blows up
+    gnorms = np.ones((2, 60))
+    js = advisory_journals(losses, gnorms, get_policy("aggressive"),
+                           preset("mxfp4_e2m1"))
+    assert js[0] == []                              # stable lane untouched
+    assert any(t["kind"] == "escalate" for t in js[1])
+
+
+# ---------------------------------------------------------------------------
+# Trainer integration + end-to-end acceptance
+# ---------------------------------------------------------------------------
+def test_fixed_scheme_exhausts_but_autopilot_averts_and_replays_bitwise(
+        tmp_path):
+    """Acceptance: under the injector, a fixed mxfp4 run livelocks into
+    `recovery_exhausted`; the same run under the autopilot completes, the
+    journal shows >= 1 escalation and >= 1 de-escalation, and re-executing
+    from the journaled schedule reproduces the loss curve bitwise."""
+    steps = 80
+
+    # -- fixed scheme: deterministic spike -> rollback -> same spike -> abort
+    _, params, loss_fn, batch_fn = _scenario(steps)
+    # spike_factor=8 vs the 1.6x/step ramp: the watchdog trips ~4-5 steps
+    # into the hostile stretch, the rollback replays the identical
+    # step-indexed data, the same spike re-trips, and the deterministic
+    # livelock aborts.  The guard's loss_ratio channel (1.5x vs trend)
+    # fires several steps before the 8x watchdog threshold.
+    tcfg = TrainerConfig(total_steps=steps, peak_lr=1e-3, log_every=1,
+                         ckpt_dir=str(tmp_path / "fixed"), ckpt_every=10,
+                         spike_factor=8.0, auto_intervention=None,
+                         max_recoveries=2)
+    fixed = Trainer(loss_fn=loss_fn, params=params,
+                    qcfg=preset("mxfp4_e2m1"), batch_fn=batch_fn, tcfg=tcfg)
+    fixed.run(steps)
+    assert fixed.events[-1]["event"] == "recovery_exhausted"
+    assert fixed.step < steps
+    recs = [e for e in fixed.events if e["event"] == "recovery"]
+    assert len(recs) == 2
+    # satellite: recovery events are self-describing (qcfg before/after)
+    assert all("from_qcfg" in e and "to_qcfg" in e for e in recs)
+
+    # -- autopilot: escalates before the watchdog fires, completes
+    auto = _trainer(steps, "mxfp4_e2m1", _trend_policy(), probe=5,
+                    max_recoveries=2, spike_factor=8.0)
+    h1 = auto.run(steps)
+    events = [e["event"] for e in auto.events]
+    assert "recovery_exhausted" not in events
+    assert "recovery" not in events            # guard acted first
+    assert len(h1) == steps
+    journal = auto._controller.journal
+    kinds = [t["kind"] for t in journal]
+    assert "escalate" in kinds and "deescalate" in kinds
+    trans_events = [e for e in auto.events
+                    if e["event"] == "guard_transition"]
+    assert [dict(t) for t in journal] == trans_events
+    assert all("from_qcfg" in t and "to_qcfg" in t for t in journal)
+
+    # -- bitwise replay from the journaled schedule
+    pol = scheduled_policy(auto._controller.schedule(),
+                           ladder=auto._controller.policy.ladder)
+    replay = _trainer(steps, "mxfp4_e2m1", pol, probe=5,
+                      max_recoveries=2, spike_factor=8.0)
+    h2 = replay.run(steps)
+    assert [r["loss"] for r in h2] == [r["loss"] for r in h1]   # bitwise
+    assert [(t["step"], t["to_level"]) for t in
+            replay._controller.journal] == \
+        [(t["step"], t["to_level"]) for t in journal]
+    assert replay.qcfg == auto.qcfg
+
+
+def test_trainer_guard_state_survives_resume(tmp_path):
+    steps = 40
+
+    def make():
+        # fresh scenario per trainer: the step function donates the param
+        # buffers, so two trainers must not share one params tree
+        _, params, loss_fn, batch_fn = _scenario(steps)
+        tcfg = TrainerConfig(total_steps=steps, peak_lr=1e-3, log_every=1,
+                             ckpt_dir=str(tmp_path), ckpt_every=10,
+                             spike_factor=10.0, auto_intervention=None,
+                             guard=_trend_policy(), guard_probe_every=5)
+        return Trainer(loss_fn=loss_fn, params=params,
+                       qcfg=preset("mxfp4_e2m1"), batch_fn=batch_fn,
+                       tcfg=tcfg)
+
+    t1 = make()
+    t1.run(30)                       # crosses the hostile onset -> escalated
+    t1._ckptr.wait()
+    assert t1._controller.journal    # at least one transition happened
+    t2 = make()
+    assert t2._controller.level == 0
+    with pytest.warns(UserWarning, match="qcfg"):
+        assert t2.restore()
+    assert any(e["event"] == "guard_restored" for e in t2.events)
+    assert t2._controller.level == t1._controller.level > 0
+    assert t2._controller.journal == t1._controller.journal
+    assert t2.qcfg == t1.qcfg == t2._controller.qcfg
+
+
+def test_run_start_event_names_guard_policy():
+    tr = _trainer(10, "mxfp4_e2m1", "conservative",
+                  spike_factor=float("inf"))
+    tr.run(2)
+    start = [e for e in tr.events if e["event"] == "run_start"][0]
+    assert start["guard"] == "conservative"
+
+
+# ---------------------------------------------------------------------------
+# sweep integration
+# ---------------------------------------------------------------------------
+def test_sweep_scheduled_guard_matches_equivalent_phases():
+    """A scheduled guard policy compiles into the same phase-split scan as
+    the equivalent RunSpec.phases — bitwise identical loss histories."""
+    from repro.sweep import run_sweep
+    from repro.sweep.spec import RunSpec
+
+    base = RunSpec(kind="proxy", d_model=32, n_layers=2, batch_size=64,
+                   steps=24, lr=1e-3, scheme="mxfp4_e2m1", teacher_seed=1)
+    g = dataclasses.replace(base, guard="sched:8=bf16_activations")
+    p = dataclasses.replace(base, phases=((8, "bf16_activations"),))
+    assert g.run_id != p.run_id                # guard is spec content
+    rep = run_sweep([g, p], keep_history=True)
+    assert rep[g.run_id].history["loss"] == rep[p.run_id].history["loss"]
+    # the scheduled journal is persisted on the result
+    assert rep[g.run_id].guard_journal
+    assert rep[g.run_id].guard_trigger_step == 8
+    assert not rep[g.run_id].guard_advisory
+    assert rep[p.run_id].guard_journal == []
+
+
+def test_sweep_scheduled_guard_level_jumps():
+    """Integer schedule entries jump to absolute ladder levels: level 1 at
+    step 6 and back to 0 at step 12 equals phases-based bf16_activations
+    during [6, 12) and the base scheme outside it."""
+    from repro.sweep import run_sweep
+    from repro.sweep.executor import _phase_segments
+    from repro.sweep.spec import RunSpec
+
+    r = RunSpec(kind="proxy", d_model=32, n_layers=2, batch_size=64,
+                steps=18, lr=1e-3, scheme="mxfp4_e2m1",
+                guard="sched:6=1,12=0")
+    segs = _phase_segments(r, preset(r.scheme))
+    assert [(a, b) for a, b, _ in segs] == [(0, 6), (6, 12), (12, 18)]
+    assert segs[0][2] == preset("mxfp4_e2m1")
+    assert segs[1][2] == preset("mxfp4_e2m1").with_bf16_activations()
+    assert segs[2][2] == preset("mxfp4_e2m1")
+    rep = run_sweep([r], keep_history=True)
+    assert len(rep[r.run_id].history["loss"]) == 18
+
+
+def test_sweep_online_guard_is_advisory_on_proxy_lanes():
+    from repro.sweep import run_sweep
+    from repro.sweep.spec import RunSpec
+
+    r = RunSpec(kind="proxy", d_model=32, n_layers=2, batch_size=64,
+                steps=20, lr=1e-3, scheme="mxfp4_e2m1", guard="aggressive")
+    rep = run_sweep([r], keep_history=True)
+    res = rep[r.run_id]
+    assert res.guard_advisory                  # no mid-scan transitions
+    assert res.steps == 20
+
+
+def test_sweep_db_persists_guard_journal_and_aggregate_reports(tmp_path):
+    from repro.sweep import RunDB, aggregate, run_sweep
+    from repro.sweep.spec import RunSpec
+
+    r = RunSpec(kind="proxy", d_model=32, n_layers=2, batch_size=64,
+                steps=16, lr=1e-3, scheme="mxfp4_e2m1", label="guarded",
+                guard="sched:4=bf16_activations")
+    db_path = str(tmp_path / "runs.jsonl")
+    run_sweep([r], db=db_path)
+    with RunDB(db_path) as db:
+        row = db.get(r.run_id)
+        assert row["result"]["guard_journal"]
+        assert row["result"]["guard_trigger_step"] == 4
+        agg = aggregate(db)
+    assert agg["guarded"]["guarded"] == 1
+    assert agg["guarded"]["averted"] == 1      # intervened and converged
+    assert agg["guarded"]["median_trigger_step"] == 4.0
+
+
+def test_runresult_from_row_tolerates_pre_guard_rows():
+    """Rows persisted before the guard fields existed must still load."""
+    from repro.sweep.executor import RunResult
+    row = {"run_id": "abc", "result": {
+        "label": "x", "scheme": "bf16", "seed": 0, "lr": 1e-3, "steps": 2,
+        "final_loss": 1.0, "tail_mean": 1.0, "min_loss": 1.0,
+        "max_gnorm": 1.0, "spikes": 0, "divergent": False,
+        "diverge_step": -1, "us_per_step": 1.0, "zeta_steps": [],
+        "zeta": [], "cosine": []}}
+    res = RunResult.from_row(row)
+    assert res.guard_journal == [] and res.guard_trigger_step == -1
+
+
+def test_sweep_lm_run_uses_real_autopilot():
+    """kind='lm' runs go through the Trainer, so a scheduled guard policy
+    performs *actual* transitions (not advisory) and the journal persists
+    on the result."""
+    from repro.sweep import run_sweep
+    from repro.sweep.spec import RunSpec
+
+    r = RunSpec(kind="lm", arch="olmo", lm_size=1, lm_vocab=64, lm_batch=2,
+                lm_seq=16, steps=8, lr=1e-3, scheme="mxfp4_e2m1",
+                guard="sched:4=bf16_activations")
+    rep = run_sweep([r])
+    res = rep[r.run_id]
+    assert res.steps == 8
+    assert not res.guard_advisory
+    assert [t["kind"] for t in res.guard_journal] == ["scheduled"]
+    assert res.guard_trigger_step == 4
+
+    # scheduled guard + phases compose (both compile into segments);
+    # an *online* guard owning the qcfg does not
+    bad = dataclasses.replace(r, guard="aggressive", phases=((2, "fp32"),))
+    with pytest.raises(ValueError, match="online guard"):
+        run_sweep([bad])
+
+
+def test_recovery_rebases_controller_so_deescalation_keeps_intervention():
+    """Regression: a watchdog recovery that applies auto_intervention used
+    to leave the controller's base/level stale, so its next transition
+    (computed from base + ladder) silently reverted the recovery's scheme.
+    After a recovery the controller rebases: level 0 *is* the recovered
+    scheme, and de-escalation can never drop below it."""
+    steps = 30
+    _, params, loss_fn, batch_fn = _scenario(steps)
+    tcfg = TrainerConfig(total_steps=steps, peak_lr=1e-3, log_every=1,
+                         spike_factor=5.0, max_recoveries=3,
+                         auto_intervention="bf16_activations",
+                         guard=GuardPolicy(
+                             name="deaf",    # never fires on its own
+                             rules=(Rule("gnorm_ratio", 1e9, calm=1.0),),
+                             cooldown=2, stability_window=3),
+                         guard_probe_every=0)
+    tr = Trainer(loss_fn=loss_fn, params=params, qcfg=preset("mxfp4_e2m1"),
+                 batch_fn=batch_fn, tcfg=tcfg)
+    tr.run(5)
+    assert tr.detector.update(1e9, None)        # injected spike
+    tr._recover("test-injected")
+    assert tr.qcfg.a_fwd is None                # intervention landed
+    assert tr._controller.base == tr.qcfg       # controller rebased
+    assert tr._controller.level == 0
+    # a full calm stretch cannot de-escalate below the recovered scheme
+    tr.run(10)
+    assert tr.qcfg.a_fwd is None
+    assert not tr._controller.journal           # no transition ever fired

@@ -178,3 +178,63 @@ def test_sweep_lane_parity_property(runs):
         np.testing.assert_allclose(hist["loss"], ref_losses, rtol=2e-4,
                                    atol=1e-7)
         assert hist["spike_flags"] == ref_flags
+
+
+# ---------------------------------------------------------------------------
+# guard policy hysteresis (repro.guard.policy)
+# ---------------------------------------------------------------------------
+signal_values = st.one_of(
+    st.floats(width=32, allow_nan=True, allow_infinity=True),
+    st.just(float("nan")), st.just(float("inf")))
+
+
+@given(trace=st.lists(signal_values, min_size=1, max_size=200),
+       cooldown=st.integers(1, 20), window=st.integers(1, 50))
+@settings(max_examples=80, deadline=None)
+def test_guard_policy_cannot_flap(trace, cooldown, window):
+    """For ANY signal trace: a policy with cooldown c performs at most
+    ceil(T/c) transitions over T steps, consecutive transitions are >= c
+    steps apart, and it never oscillates A -> B -> A within one stability
+    window (the revisit lock)."""
+    from repro.guard import GuardPolicy, PolicyState, Rule, decide
+
+    pol = GuardPolicy(rules=(Rule("x", 1.0, calm=0.5),),
+                      cooldown=cooldown, stability_window=window,
+                      max_transitions=1 << 30)
+    state = PolicyState()
+    transitions = []
+    for t, v in enumerate(trace):
+        state, dec = decide(pol, state, t, {"x": v})
+        if dec is not None:
+            transitions.append((t, dec.from_level, dec.to_level))
+
+    T = len(trace)
+    assert len(transitions) <= -(-T // cooldown)       # ceil(T / c)
+    for (t1, _, _), (t2, _, _) in zip(transitions, transitions[1:]):
+        assert t2 - t1 >= cooldown
+    # revisit lock: a transition returning to the level just left must be
+    # at least one stability window after the transition that left it
+    for (t1, a1, b1), (t2, a2, b2) in zip(transitions, transitions[1:]):
+        assert a2 == b1                                # levels chain
+        if b2 == a1:
+            assert t2 - t1 >= window
+
+
+@given(trace=st.lists(st.floats(0.0, 10.0, width=32), min_size=5,
+                      max_size=120),
+       budget=st.integers(0, 4))
+@settings(max_examples=40, deadline=None)
+def test_guard_rule_budget_bounds_escalations(trace, budget):
+    """A rule with a firing budget causes at most that many escalations,
+    no matter how hostile the trace."""
+    from repro.guard import GuardPolicy, PolicyState, Rule, decide
+
+    pol = GuardPolicy(rules=(Rule("x", 1.0, calm=0.5, budget=budget),),
+                      cooldown=1, stability_window=1,
+                      max_transitions=1 << 30, deescalate=False)
+    state = PolicyState()
+    n_esc = 0
+    for t, v in enumerate(trace):
+        state, dec = decide(pol, state, t, {"x": v})
+        n_esc += dec is not None and dec.kind == "escalate"
+    assert n_esc <= budget
