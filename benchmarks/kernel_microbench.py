@@ -9,18 +9,33 @@ the GEMM operand streams, which the roofline analysis applies).
 Reports all three GEMMs of a quantized training step side by side —
 forward (blocks along K), dgrad (blocks along N), wgrad (blocks along T) —
 at matched (T, K, N), i.e. one fused step of a (T, K) activation through a
-(K, N) layer in the paper's per-pass formats.
+(K, N) layer in the paper's per-pass formats, plus the flash-attention
+family (fwd / dgrad / decode) against its jnp oracle.
+
+``python -m benchmarks.kernel_microbench --smoke [--seq N]`` is the CI
+threshold gate: flash-attention kernels must be bit-identical to the
+oracle under interpret mode, and causal tile-skipping must actually beat
+the dense (full-mask) emulation at T=N (fused vs emulated on a real TPU
+backend).  Exit code 1 on any violation.
 """
 from __future__ import annotations
+
+import argparse
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import E4M3, E5M2
-from repro.kernels import (mx_matmul, mx_matmul_dgrad, mx_matmul_dgrad_ref,
+from repro.core import AttnSpec, E4M3, E5M2
+from repro.kernels import (mx_attention_decode, mx_attention_decode_ref,
+                           mx_flash_attention, mx_flash_attention_bwd,
+                           mx_flash_attention_bwd_ref, mx_flash_attention_ref,
+                           mx_matmul, mx_matmul_dgrad, mx_matmul_dgrad_ref,
                            mx_matmul_ref, mx_matmul_wgrad,
                            mx_matmul_wgrad_ref, mx_quantize, mx_quantize_ref)
+from repro.kernels.mx_attention import attn_tiles
+from repro.kernels.ref import attn_tile_needed
 from .common import Row, time_fn
 
 
@@ -49,6 +64,72 @@ def _gemm_rows(t: int, k: int, n: int) -> list:
     return rows
 
 
+def attn_reclaimed_frac(spec: AttnSpec, t_q: int, t_k: int) -> float:
+    """Fraction of attention-BMM FLOPs that causal/window tile-skipping
+    reclaims (fully-masked KV tiles never computed) vs a dense sweep."""
+    tile_q, tile_k, nq, nk = attn_tiles(spec, t_q, t_k)
+    needed = sum(bool(attn_tile_needed(spec, qi, kj, tile_q, tile_k, t_k))
+                 for qi in range(nq) for kj in range(nk))
+    return 1.0 - needed / float(nq * nk)
+
+
+def _attn_inputs(bh: int, g: int, t: int, d: int, key: int = 7):
+    ks = jax.random.split(jax.random.PRNGKey(key), 4)
+    q = jax.random.normal(ks[0], (bh, g, t, d), jnp.float32)
+    k = jax.random.normal(ks[1], (bh, t, d), jnp.float32)
+    v = jax.random.normal(ks[2], (bh, t, d), jnp.float32)
+    do = jax.random.normal(ks[3], (bh, g, t, d), jnp.float32)
+    return q, k, v, do
+
+
+def _jit_fwd_ref(spec: AttnSpec):
+    """Compiled oracle forward (the ops wrappers are already jit'd; the raw
+    refs would re-trace their scans on every timed call)."""
+    return jax.jit(lambda q, k, v: mx_flash_attention_ref(q, k, v, E4M3,
+                                                          spec))
+
+
+def _attention_rows(t: int, d: int) -> list:
+    """Flash-attention fwd/dgrad/decode: Pallas (interpret) vs oracle."""
+    bh, g = 2, 2
+    spec = AttnSpec.training(q_chunk=min(128, t), kv_chunk=min(128, t))
+    q, k, v, do = _attn_inputs(bh, g, t, d)
+    flops = 2.0 * bh * g * t * t * d * 2          # QK^T + PV, dense
+    reclaim = attn_reclaimed_frac(spec, t, t)
+
+    fr = _jit_fwd_ref(spec)
+    fwd_k = lambda: mx_flash_attention(q, k, v, E4M3, spec)
+    fwd_r = lambda: fr(q, k, v)
+    us_k, us_r = time_fn(fwd_k, iters=3), time_fn(fwd_r, iters=3)
+    (o_k, l_k), (o_r, l_r) = fwd_k(), fwd_r()
+    err = float(jnp.abs(o_k - o_r).max())
+    rows = [Row(f"kernel.attn_fwd.{t}x{d}", us_k,
+                f"ref_us={us_r:.1f} max_err={err} "
+                f"gflops_dense={flops / 1e9:.2f} "
+                f"causal_flops_reclaimed={reclaim:.0%}")]
+
+    br = jax.jit(lambda *a: mx_flash_attention_bwd_ref(*a, E4M3, spec))
+    bwd_k = lambda: mx_flash_attention_bwd(q, k, v, do, o_r, l_r, E4M3, spec)
+    bwd_r = lambda: br(q, k, v, do, o_r, l_r)
+    us_k, us_r = time_fn(bwd_k, iters=3), time_fn(bwd_r, iters=3)
+    errs = [float(jnp.abs(a - b).max()) for a, b in zip(bwd_k(), bwd_r())]
+    rows.append(Row(f"kernel.attn_dgrad.{t}x{d}", us_k,
+                    f"ref_us={us_r:.1f} max_err={max(errs)} "
+                    f"gflops_dense={2.5 * flops / 1e9:.2f}"))
+
+    qd = q[:, :, 0]
+    valid = jnp.arange(t)[None, :] <= (t // 2) * jnp.ones((bh, 1), jnp.int32)
+    dr = jax.jit(lambda *a: mx_attention_decode_ref(*a, E4M3))
+    dec_k = lambda: mx_attention_decode(qd, k, v, valid, E4M3)
+    dec_r = lambda: dr(qd, k, v, valid)
+    us_k, us_r = time_fn(dec_k, iters=3), time_fn(dec_r, iters=3)
+    err = float(jnp.abs(dec_k() - dec_r()).max())
+    rows.append(Row(f"kernel.attn_decode.S{t}x{d}", us_k,
+                    f"ref_us={us_r:.1f} max_err={err} "
+                    f"modeled_hbm_saving=1.94x"))
+    return rows
+
+
 def run(budget: str = "quick"):
     rows = []
     shapes = [(256, 512)] if budget == "quick" else [(256, 512),
@@ -66,4 +147,81 @@ def run(budget: str = "quick"):
                                                        (512, 512, 512)]
     for (t, k, n) in tkn:
         rows.extend(_gemm_rows(t, k, n))
+    for t in ([256] if budget == "quick" else [256, 512]):
+        rows.extend(_attention_rows(t, 64))
     return rows
+
+
+def smoke(seq: int = 4096) -> int:
+    """CI threshold gate (exit code).  Two checks:
+
+    1. Bit-exactness: the flash fwd/dgrad/decode Pallas kernels (interpret
+       mode off-TPU) must match their jnp oracles *bitwise*, padding
+       included (non-multiple Tq/Tk).
+    2. Throughput at T=seq: causal tile-skipping must reclaim real wall
+       time — on TPU the fused kernel must beat the emulation; on CPU
+       (no MXU) the causal emulation must beat the dense full-mask one
+       by at least half the tile-count saving.
+    """
+    failures = []
+    spec = AttnSpec.training(q_chunk=64, kv_chunk=64)
+    q, k, v, do = _attn_inputs(2, 2, 160, 64)      # Tq=Tk=160: pad path
+    o_k, l_k = mx_flash_attention(q, k, v, E4M3, spec)
+    o_r, l_r = mx_flash_attention_ref(q, k, v, E4M3, spec)
+    if not (np.array_equal(o_k, o_r) and np.array_equal(l_k, l_r)):
+        failures.append("fwd kernel != oracle (bitwise)")
+    g_k = mx_flash_attention_bwd(q, k, v, do, o_r, l_r, E4M3, spec)
+    g_r = mx_flash_attention_bwd_ref(q, k, v, do, o_r, l_r, E4M3, spec)
+    if not all(np.array_equal(a, b) for a, b in zip(g_k, g_r)):
+        failures.append("dgrad kernel != oracle (bitwise)")
+    valid = jnp.arange(160)[None, :] <= jnp.asarray([[80], [159]])
+    d_k = mx_attention_decode(q[:, :, 0], k, v, valid, E4M3)
+    d_r = mx_attention_decode_ref(q[:, :, 0], k, v, valid, E4M3)
+    if not np.array_equal(d_k, d_r):
+        failures.append("decode kernel != oracle (bitwise)")
+
+    chunk = max(256, seq // 8)
+    causal = AttnSpec.training(q_chunk=chunk, kv_chunk=chunk)
+    dense = AttnSpec.training(causal=False, q_chunk=chunk, kv_chunk=chunk)
+    q, k, v, _ = _attn_inputs(1, 1, seq, 64)
+    reclaim = attn_reclaimed_frac(causal, seq, seq)
+    on_tpu = jax.default_backend() == "tpu"
+    f_skip, f_dense = _jit_fwd_ref(causal), _jit_fwd_ref(dense)
+    if on_tpu:
+        t_fused = time_fn(lambda: mx_flash_attention(q, k, v, E4M3, causal),
+                          iters=3)
+        t_emul = time_fn(lambda: f_skip(q, k, v), iters=3)
+        print(f"# smoke T={seq}: fused={t_fused:.0f}us "
+              f"emulated={t_emul:.0f}us")
+        if t_fused > t_emul:
+            failures.append(f"fused slower than emulated at T={seq} "
+                            f"({t_fused:.0f}us vs {t_emul:.0f}us)")
+    else:
+        t_skip = time_fn(lambda: f_skip(q, k, v), iters=3)
+        t_dense = time_fn(lambda: f_dense(q, k, v), iters=3)
+        print(f"# smoke T={seq}: causal_skip={t_skip:.0f}us "
+              f"dense={t_dense:.0f}us reclaimable={reclaim:.0%}")
+        if t_skip > t_dense * (1.0 - reclaim / 2):
+            failures.append(
+                f"causal tile-skipping reclaimed too little at T={seq}: "
+                f"{t_skip:.0f}us vs dense {t_dense:.0f}us "
+                f"(tile saving {reclaim:.0%})")
+    for f in failures:
+        print(f"SMOKE FAIL: {f}", file=sys.stderr)
+    print(f"# smoke: {len(failures)} failure(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="bit-exactness + tile-skip throughput gate (CI)")
+    ap.add_argument("--seq", type=int, default=4096,
+                    help="sequence length for the throughput gate")
+    ap.add_argument("--budget", default="quick", choices=["quick", "full"])
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke(args.seq))
+    from .common import emit
+    print("name,us_per_call,derived")
+    emit(run(args.budget))

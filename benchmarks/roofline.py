@@ -13,6 +13,12 @@ useful-compute ratio MODEL/HLO-dot (catches remat + masked-attention +
 padding waste), plus roofline_frac = ideal-model-compute-time over the
 dominant term — the score optimized by the §Perf hillclimb.
 
+Each train/prefill cell also reports ``attn_reclaim``: the fraction of
+attention-BMM FLOPs that causal/window tile-skipping reclaims (fully
+masked KV tiles are skipped by both the flash Pallas kernels and the jnp
+emulation scan, so those FLOPs never hit the MXU — the compute term of
+attention-heavy cells shrinks by exactly this fraction).
+
 CPU-backend caveat (documented in EXPERIMENTS.md): float-normalization
 rewrites some bf16 elementwise ops to f32, biasing traffic_bytes UP — the
 memory terms are conservative upper bounds.
@@ -26,6 +32,7 @@ from typing import Dict, List, Optional
 
 from repro.configs import SHAPES, get_config
 from .common import Row
+from .kernel_microbench import attn_reclaimed_frac
 
 PEAK_FLOPS = 197e12          # TFLOP/s bf16 per v5e chip
 HBM_BW = 819e9               # B/s per chip
@@ -49,6 +56,17 @@ def model_flops_per_device(arch: str, shape_name: str, n_dev: int) -> float:
     return total / n_dev
 
 
+def attn_reclaim(arch: str, shape_name: str) -> Optional[float]:
+    """Tile-skipping FLOPs saving for this cell's attention mask (None for
+    decode shapes — one-token steps have no masked tiles to skip)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        return None
+    spec = cfg.attn_spec("attn")
+    return attn_reclaimed_frac(spec, shape.seq, shape.seq)
+
+
 def analyze_record(rec: dict) -> Optional[dict]:
     if rec.get("status") != "ok":
         return None
@@ -64,6 +82,7 @@ def analyze_record(rec: dict) -> Optional[dict]:
     dom = max(terms.values())
     return {
         "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "attn_reclaimed": attn_reclaim(rec["arch"], rec["shape"]),
         "precision": rec.get("precision", "?"),
         "t_compute_s": t_comp, "t_memory_s": t_mem,
         "t_collective_s": t_coll, "bottleneck": bottleneck,
@@ -99,6 +118,7 @@ def run(budget: str = "quick"):
                     "no dry-run artifacts found; run "
                     "`python -m repro.launch.dryrun` first")]
     for c in cells:
+        ar = c["attn_reclaimed"]
         rows.append(Row(
             f"roofline.{c['arch']}.{c['shape']}.{c['precision']}", 0.0,
             f"comp={c['t_compute_s']*1e3:.2f}ms "
@@ -107,5 +127,6 @@ def run(budget: str = "quick"):
             f"bottleneck={c['bottleneck']} "
             f"useful={c['useful_flops_ratio']:.2f} "
             f"roofline_frac={c['roofline_frac']:.3f} "
-            f"mem_gib={c['bytes_per_device_gib']:.1f}"))
+            f"mem_gib={c['bytes_per_device_gib']:.1f} "
+            f"attn_reclaim={'n/a' if ar is None else format(ar, '.0%')}"))
     return rows

@@ -5,8 +5,9 @@ from .formats import (BF16, E2M1, E2M3, E3M2, E4M3, E5M2, FORMATS,
 from .mx import MX_BLOCK, mx_stats, quantize_mx
 from .qconfig import (INTERVENTIONS, PRESETS, QuantConfig, apply_intervention,
                       list_interventions, list_presets, preset)
-from .qlinear import (fused_gemms_enabled, qdot_attn, qeinsum_bmm, qmatmul,
-                      use_fused_gemms)
+from .attnspec import AttnSpec
+from .qlinear import (fused_gemms_enabled, mx_contract, qdot_attn,
+                      qeinsum_bmm, qmatmul, use_fused_gemms)
 from .diagnostics import (BatchedSpikeDetector, GradBiasStats, SpikeDetector,
                           grad_bias_probe, ln_clamp_stats, zeta_bound)
 
@@ -16,6 +17,7 @@ __all__ = [
     "MX_BLOCK", "mx_stats", "quantize_mx",
     "INTERVENTIONS", "PRESETS", "QuantConfig", "apply_intervention", "preset",
     "list_interventions", "list_presets",
+    "AttnSpec", "mx_contract",
     "qdot_attn", "qeinsum_bmm", "qmatmul", "fused_gemms_enabled",
     "use_fused_gemms",
     "BatchedSpikeDetector", "GradBiasStats", "SpikeDetector",

@@ -1,0 +1,78 @@
+"""AttnSpec: one static description of an attention call's mask + geometry.
+
+Replaces the kwarg sprawl previously duplicated across `flash_attention`,
+`local_attention`, `attention_decode`, `attention_prefill`, and `mla.py`
+(``causal``, ``q_offset``, ``q_chunk``, ``kv_chunk``, window sizes, cache
+geometry) with a single frozen, hashable dataclass that rides through jit
+as a static argument — the same object parameterizes the pure-jnp
+emulation scan, the fused Pallas flash-attention kernels, and the serve
+engine's prefill/decode paths, so mask semantics cannot drift between
+them.
+
+Mask kinds
+----------
+  "causal"   query position ``q_offset + i`` attends kv positions <= it.
+  "full"     every (valid) kv position — cross-attention / encoder.
+  "window"   causal AND within the last ``window`` positions (inclusive
+             of self): ``0 <= qpos - kpos < window``.
+  "ring"     decode-time ring-buffer cache of size S == cache capacity:
+             slot validity is derived from per-row positions (dynamic, so
+             the validity mask is an *argument* of the decode contraction,
+             not part of the spec).
+
+Only static (python int/str) fields live here; dynamic per-row positions
+are passed alongside the operands.  ``q_chunk``/``kv_chunk`` double as the
+kernel tile sizes, which is what makes the emulation scan and the
+interpret-mode kernels bit-identical (same tiles, same accumulation
+order).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["AttnSpec"]
+
+_KINDS = ("causal", "full", "window", "ring")
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    kind: str = "causal"     # "causal" | "full" | "window" | "ring"
+    window: int = 0          # window size for kind in ("window", "ring")
+    q_offset: int = 0        # static query-position offset (prefill cont.)
+    q_chunk: int = 512       # query tile rows (flash scan + kernel tile)
+    kv_chunk: int = 1024     # kv tile columns (flash scan + kernel tile)
+    cache_len: int = 0       # decode-cache capacity (0 = derive from array)
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown AttnSpec kind {self.kind!r}; "
+                             f"expected one of {_KINDS}")
+        if self.kind in ("window", "ring") and self.window <= 0:
+            raise ValueError(f"kind={self.kind!r} needs window > 0")
+
+    # -- constructors for the three call-site families ---------------------
+    @classmethod
+    def training(cls, *, causal: bool = True, window: int = 0,
+                 q_chunk: int = 512, kv_chunk: int = 1024,
+                 q_offset: int = 0) -> "AttnSpec":
+        """Full-sequence forward (training / fused prefill / cross-attn)."""
+        if window > 0:
+            return cls(kind="window", window=window, q_chunk=q_chunk,
+                       kv_chunk=kv_chunk, q_offset=q_offset)
+        return cls(kind="causal" if causal else "full", q_chunk=q_chunk,
+                   kv_chunk=kv_chunk, q_offset=q_offset)
+
+    @classmethod
+    def decode(cls, *, window: int = 0, cache_len: int = 0) -> "AttnSpec":
+        """One-token (Tq=1) decode against a full or ring-buffer cache."""
+        if window > 0:
+            return cls(kind="ring", window=window, cache_len=cache_len)
+        return cls(kind="causal", cache_len=cache_len)
+
+    @property
+    def is_causal(self) -> bool:
+        return self.kind in ("causal", "window")
+
+    def with_offset(self, q_offset: int) -> "AttnSpec":
+        return dataclasses.replace(self, q_offset=q_offset)

@@ -13,14 +13,19 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.attnspec import AttnSpec
 from repro.core.formats import ElementFormat
 from repro.core.mx import MX_BLOCK
 from . import ref
+from .mx_attention import (attn_tiles, mx_attn_bwd_pallas,
+                           mx_attn_decode_pallas, mx_attn_fwd_pallas)
 from .mx_matmul import mx_matmul_pallas
 from .mx_matmul_bwd import mx_matmul_dgrad_pallas, mx_matmul_wgrad_pallas
 from .mx_quant import mx_quantize_pallas
 
-__all__ = ["mx_quantize", "mx_matmul", "mx_matmul_dgrad", "mx_matmul_wgrad"]
+__all__ = ["mx_quantize", "mx_matmul", "mx_matmul_dgrad", "mx_matmul_wgrad",
+           "mx_flash_attention", "mx_flash_attention_bwd",
+           "mx_attention_decode"]
 
 
 def _use_interpret() -> bool:
@@ -76,6 +81,67 @@ def mx_matmul_dgrad(dy: jax.Array, w: jax.Array,
     y2 = mx_matmul_dgrad_pallas(dy2, w, fmt_g, fmt_w, block=block,
                                 interpret=_use_interpret())
     return y2.reshape(lead + (w.shape[0],))
+
+
+def _attn_kernel_ok(fmt: Optional[ElementFormat], scale_mode: str,
+                    d: int, tile_k: int, block: int) -> bool:
+    """Kernel eligibility: quantized tiles need block-multiple MX axes
+    (d for QK^T, the kv tile for PV) and the floor scale rule (the only
+    one _quantize_block_tile implements); bf16 attention has no such
+    constraint."""
+    if scale_mode != "floor":
+        return False
+    return fmt is None or (d % block == 0 and tile_k % block == 0)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "spec", "block",
+                                             "scale_mode"))
+def mx_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                       fmt: Optional[ElementFormat], spec: AttnSpec,
+                       block: int = MX_BLOCK, scale_mode: str = "floor"):
+    """Kernel-backed flash-attention forward on the folded layout
+    (q (BH,G,Tq,d), k (BH,Tk,d), v (BH,Tk,dv)) -> (out, lse).
+
+    Falls back to the jnp oracle for non-floor scale modes or MX axes that
+    are not block multiples — same numerics either way."""
+    tile_k = attn_tiles(spec, q.shape[2], k.shape[1])[1]
+    if not _attn_kernel_ok(fmt, scale_mode, q.shape[-1], tile_k, block):
+        return ref.mx_flash_attention_ref(q, k, v, fmt, spec, block=block,
+                                          scale_mode=scale_mode)
+    return mx_attn_fwd_pallas(q, k, v, fmt, spec, block=block,
+                              interpret=_use_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "spec", "block",
+                                             "scale_mode"))
+def mx_flash_attention_bwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                           dout: jax.Array, out: jax.Array, lse: jax.Array,
+                           fmt: Optional[ElementFormat], spec: AttnSpec,
+                           block: int = MX_BLOCK, scale_mode: str = "floor"):
+    """Kernel-backed flash-attention dgrad -> (dq, dk, dv)."""
+    tile_k = attn_tiles(spec, q.shape[2], k.shape[1])[1]
+    if not _attn_kernel_ok(fmt, scale_mode, q.shape[-1], tile_k, block):
+        return ref.mx_flash_attention_bwd_ref(q, k, v, dout, out, lse, fmt,
+                                              spec, block=block,
+                                              scale_mode=scale_mode)
+    return mx_attn_bwd_pallas(q, k, v, dout, out, lse, fmt, spec,
+                              block=block, interpret=_use_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "scale_mode"))
+def mx_attention_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                        valid: jax.Array, fmt: Optional[ElementFormat],
+                        block: int = MX_BLOCK,
+                        scale_mode: str = "floor") -> jax.Array:
+    """Kernel-backed decode attention: q (BH,G,d) against a (BH,S,·) cache
+    with a precomputed (BH,S) bool validity mask (ring-buffer or global
+    semantics live entirely in the mask)."""
+    d, S = q.shape[-1], k.shape[1]
+    if not _attn_kernel_ok(fmt, scale_mode, d, S, block):
+        return ref.mx_attention_decode_ref(q, k, v, valid, fmt, block=block,
+                                           scale_mode=scale_mode)
+    return mx_attn_decode_pallas(q, k, v, valid, fmt, block=block,
+                                 interpret=_use_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("fmt_a", "fmt_g", "block"))

@@ -1,31 +1,35 @@
-"""Attention: GQA/MQA/MHA with QK-norm and RoPE, chunked online-softmax.
+"""Attention: GQA/MQA/MHA with QK-norm and RoPE, via mx_contract.
 
 The score/value BMMs are MX-quantized when ``qcfg.attn`` is set (the MX
 emulation library quantizes MatMul/BMM inputs); softmax runs in fp32.
-The q/k/v/o *projections* go through `qdense` -> `qmatmul`, whose custom
-VJP routes their forward, dgrad, and wgrad GEMMs to the fused Pallas
-kernels in the per-pass formats of ``qcfg`` — attention gradients are
-quantized at these projection GEMMs (the dominant cost), while the BMM
-backward stays straight-through bf16.
+The q/k/v/o *projections* go through `qdense` -> ``mx_contract(kind=
+"dense")``, whose custom VJP routes their forward, dgrad, and wgrad GEMMs
+to the fused Pallas kernels in the per-pass formats of ``qcfg``.
 
-`flash_attention` is the TPU-idiomatic exact attention: lax.scan over query
-chunks with an inner scan over KV chunks carrying online-softmax state
-(m, l, acc), bounding live memory to one (Cq, Ck) tile per (batch, head) —
-required for the 32k prefill cells to fit 16 GB/chip without a fused kernel.
-Grouped-query structure (B, Hkv, G, ...) is kept inside the einsums so KV
-heads are never materialized G times.
+Attention *mixing* routes through ``mx_contract(kind="flash_attn")`` /
+``"attn_decode"`` on the folded (BH, G, T, d) layout: on the fused path
+that is the flash-attention Pallas kernel family (mx_attention.py) with
+online softmax, causal/window tile-skipping, and a hand-written flash
+dgrad; on the emulation path it is the bit-identical jnp oracle
+(kernels/ref.py) — masked causal KV tiles are skipped there too
+(lax.cond), so the CPU baseline no longer computes the upper triangle the
+roofline used to flag.  Mask kind, window, chunk/tile sizes, and cache
+geometry all come from a single :class:`~repro.core.AttnSpec`.
+
+Attention gradients are quantized at the projection GEMMs (the dominant
+cost); the flash backward recomputes probabilities from the quantized
+scores but keeps its gradient products straight-through bf16.
 """
 from __future__ import annotations
 
 import math
-from functools import partial
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import QuantConfig, quantize_mx
-from .layers import dense_init, norm_init, apply_norm, qdense, rope
+from repro.core import AttnSpec, QuantConfig, mx_contract, quantize_mx
 
 __all__ = ["attn_init", "attention", "attention_decode", "attention_prefill",
            "flash_attention", "local_attention"]
@@ -42,6 +46,7 @@ def _maybe_quant(x, qcfg: QuantConfig, axis: int):
 
 def attn_init(key, d_model: int, n_heads: int, n_kv: int, d_head: int,
               qk_norm: bool = False, qkv_bias: bool = False, n_layers: int = 1):
+    from .layers import dense_init, norm_init
     ks = jax.random.split(key, 4)
     p = {
         "wq": dense_init(ks[0], d_model, n_heads * d_head, bias=qkv_bias),
@@ -58,6 +63,7 @@ def attn_init(key, d_model: int, n_heads: int, n_kv: int, d_head: int,
 
 def _project_qkv(p, x, xkv, qcfg, n_heads, n_kv, d_head, positions,
                  kv_positions=None, rope_theta=1e4, use_rope=True):
+    from .layers import apply_norm, qdense, rope
     B, T = x.shape[:2]
     Tk = xkv.shape[1]
     G = n_heads // n_kv
@@ -74,156 +80,111 @@ def _project_qkv(p, x, xkv, qcfg, n_heads, n_kv, d_head, positions,
     return q, k[:, :, :, 0], v[:, :, :, 0]
 
 
-def flash_attention(q, k, v, qcfg: QuantConfig, causal: bool = True,
-                    q_chunk: int = 512, kv_chunk: int = 1024,
-                    q_offset: int = 0) -> jax.Array:
-    """Exact chunked attention with online softmax.
+def _fold(q, k, v):
+    """(B, T, Hkv, G/·, d) model layout -> the canonical kernel layout
+    q (B*Hkv, G, Tq, d), k (B*Hkv, Tk, d), v (B*Hkv, Tk, dv)."""
+    B, Tq, Hkv, G, d = q.shape
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * Hkv, G, Tq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, k.shape[1], k.shape[-1])
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, v.shape[1], v.shape[-1])
+    return qf, kf, vf
+
+
+def _unfold(out, B, Hkv):
+    """(B*Hkv, G, Tq, dv) -> (B, Tq, Hkv, G, dv)."""
+    BH, G, Tq, dv = out.shape
+    return out.reshape(B, Hkv, G, Tq, dv).transpose(0, 3, 1, 2, 4)
+
+
+def flash_attention(q, k, v, qcfg: QuantConfig,
+                    spec: Optional[AttnSpec] = None, *,
+                    causal: bool = True, q_chunk: int = 512,
+                    kv_chunk: int = 1024, q_offset: int = 0) -> jax.Array:
+    """Exact attention with online softmax and masked-tile skipping.
 
     q: (B, Tq, Hkv, G, d); k: (B, Tk, Hkv, d); v: (B, Tk, Hkv, dv).
-    Returns (B, Tq, Hkv, G, dv).  ``q_offset`` shifts query positions for
-    causal masking (decode/prefill continuation).  Baseline computes every
-    (q,kv) tile and masks — the causal upper triangle is wasted compute
-    flagged in the roofline (hillclimb target).
+    Returns (B, Tq, Hkv, G, dv).  Pass ``spec`` (an AttnSpec) to select
+    mask kind and tiling; the bare ``causal``/``q_chunk``/``kv_chunk``/
+    ``q_offset`` kwargs are the deprecated pre-AttnSpec signature.
     """
-    B, Tq, Hkv, G, d = q.shape
-    Tk = k.shape[1]
-    dv = v.shape[-1]
-    q_chunk = min(q_chunk, Tq)
-    kv_chunk = min(kv_chunk, Tk)
-    # Non-multiple lengths (arbitrary serving prompts) are zero-padded up
-    # to a chunk multiple — padded kv positions are masked below, padded
-    # query rows are sliced off at the end — preserving O(T·chunk) live
-    # memory instead of degrading to one T-sized chunk.
-    pad_q = (-Tq) % q_chunk
-    pad_k = (-Tk) % kv_chunk
-    if pad_q:
-        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
-    if pad_k:
-        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
-    nq, nk = (Tq + pad_q) // q_chunk, (Tk + pad_k) // kv_chunk
-    scale = 1.0 / math.sqrt(d)
-
-    qc = q.reshape(B, nq, q_chunk, Hkv, G, d).transpose(1, 0, 3, 4, 2, 5)
-    kc = k.reshape(B, nk, kv_chunk, Hkv, d).transpose(1, 0, 3, 2, 4)
-    vc = v.reshape(B, nk, kv_chunk, Hkv, dv).transpose(1, 0, 3, 2, 4)
-
-    def q_step(_, qi_qt):
-        qi, qt = qi_qt                       # qt: (B, Hkv, G, Cq, d)
-        qt = _maybe_quant(qt, qcfg, axis=-1)
-        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
-        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
-        a0 = jnp.zeros((B, Hkv, G, q_chunk, dv), jnp.float32)
-
-        def kv_step(carry, ki_kt_vt):
-            m, l, acc = carry
-            ki, kt, vt = ki_kt_vt            # kt/vt: (B, Hkv, Ck, d)
-            ktq = _maybe_quant(kt, qcfg, axis=-1)
-            s = jnp.einsum("bhgqd,bhkd->bhgqk", qt.astype(jnp.float32),
-                           ktq.astype(jnp.float32)) * scale
-            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
-            if pad_k:
-                s = jnp.where(kpos[None, :] < Tk, s, NEG_INF)
-            if causal:
-                qpos = qi * q_chunk + jnp.arange(q_chunk) + q_offset
-                s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
-            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-            p = jnp.exp(s - m_new[..., None])
-            corr = jnp.exp(m - m_new)
-            pq = _maybe_quant(p, qcfg, axis=-1)
-            vtq = _maybe_quant(vt, qcfg, axis=-2)
-            pv = jnp.einsum("bhgqk,bhkd->bhgqd", pq, vtq.astype(jnp.float32))
-            return (m_new, l * corr + jnp.sum(p, -1),
-                    acc * corr[..., None] + pv), None
-
-        (m, l, acc), _ = jax.lax.scan(
-            kv_step, (m0, l0, a0), (jnp.arange(nk), kc, vc))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
-        return None, out.astype(q.dtype)
-
-    _, out = jax.lax.scan(q_step, None, (jnp.arange(nq), qc))
-    # out: (nq, B, Hkv, G, Cq, dv) -> (B, Tq+pad_q, Hkv, G, dv)
-    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Tq + pad_q, Hkv, G, dv)
-    return out[:, :Tq]
+    if spec is None:
+        warnings.warn(
+            "flash_attention(..., causal=, q_chunk=, ...) kwargs are "
+            "deprecated; pass spec=AttnSpec.training(...)",
+            DeprecationWarning, stacklevel=2)
+        spec = AttnSpec.training(causal=causal, q_chunk=q_chunk,
+                                 kv_chunk=kv_chunk, q_offset=q_offset)
+    B, Hkv = q.shape[0], q.shape[2]
+    qf, kf, vf = _fold(q, k, v)
+    out = mx_contract(qf, (kf, vf), qcfg, kind="flash_attn", spec=spec)
+    return _unfold(out, B, Hkv)
 
 
 def local_attention(q, k, v, qcfg: QuantConfig, window: int) -> jax.Array:
-    """Causal sliding-window attention (RecurrentGemma's 1:2 local layers).
-
-    Chunked so that query chunk i attends only kv chunks {i-1, i}: exact
-    for window ≤ chunk, O(T·W) compute/memory instead of O(T²).
-    """
-    B, Tq, Hkv, G, d = q.shape
-    W = min(window, Tq)
-    if Tq % W:  # pad sequence to a window multiple
-        pad = (-Tq) % W
-        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
-        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    T = q.shape[1]
-    n = T // W
-    scale = 1.0 / math.sqrt(d)
-    qc = q.reshape(B, n, W, Hkv, G, d)
-    kc = k.reshape(B, n, W, Hkv, d)
-    vc = v.reshape(B, n, W, Hkv, d)
-    # previous chunk (zero for the first -> masked out by position check)
-    k_prev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], 1)
-    v_prev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], 1)
-    k2 = jnp.concatenate([k_prev, kc], 2)     # (B, n, 2W, Hkv, d)
-    v2 = jnp.concatenate([v_prev, vc], 2)
-    qq = _maybe_quant(qc, qcfg, axis=-1)
-    kk = _maybe_quant(k2, qcfg, axis=-1)
-    s = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qq.astype(jnp.float32),
-                   kk.astype(jnp.float32)) * scale
-    qpos = jnp.arange(W)[:, None] + W                    # within [W, 2W)
-    kpos = jnp.arange(2 * W)[None, :]
-    ok = (qpos >= kpos) & (qpos - kpos < window)
-    chunk0 = jnp.arange(n) == 0                          # first chunk: no prev
-    ok0 = ok & (kpos >= W)
-    mask = jnp.where(chunk0[:, None, None], ok0[None], ok[None])  # (n, W, 2W)
-    s = jnp.where(mask[None, :, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    pq = _maybe_quant(p, qcfg, axis=-1)
-    vv = _maybe_quant(v2, qcfg, axis=-3)
-    o = jnp.einsum("bnhgqk,bnkhd->bnqhgd", pq, vv.astype(jnp.float32))
-    o = o.reshape(B, T, Hkv, G, d)[:, :Tq].astype(q.dtype)
-    return o
+    """Deprecated: causal sliding-window attention is now the
+    ``kind="window"`` mask of :func:`flash_attention` (tile-skipped online
+    softmax, O(T·W) compute once tiles outside the window are skipped)."""
+    warnings.warn(
+        "local_attention is deprecated; use flash_attention with "
+        "spec=AttnSpec.training(window=...)",
+        DeprecationWarning, stacklevel=2)
+    return flash_attention(q, k, v, qcfg,
+                           AttnSpec.training(window=window))
 
 
 def attention(p, x, *, qcfg: QuantConfig, n_heads: int, n_kv: int,
-              d_head: int, positions, causal: bool = True, window: int = 0,
+              d_head: int, positions, spec: AttnSpec,
               xkv: Optional[jax.Array] = None, kv_positions=None,
-              rope_theta: float = 1e4, use_rope: bool = True,
-              q_chunk: int = 512, kv_chunk: int = 1024) -> jax.Array:
-    """Full attention layer (projections + mixing + output projection)."""
+              rope_theta: float = 1e4, use_rope: bool = True) -> jax.Array:
+    """Full attention layer (projections + mixing + output projection).
+
+    ``spec`` carries the mask kind (causal/full/window), the query-position
+    offset, and the chunk/tile geometry; cross-attention (``xkv``) should
+    use a ``kind="full"`` spec.
+    """
+    from .layers import qdense
     cross = xkv is not None
     q, k, v = _project_qkv(p, x, xkv if cross else x, qcfg, n_heads, n_kv,
                            d_head, positions, kv_positions, rope_theta,
                            use_rope=use_rope and not cross)
-    if window > 0 and not cross:
-        o = local_attention(q, k, v, qcfg, window)
-    else:
-        o = flash_attention(q, k, v, qcfg, causal=causal and not cross,
-                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    o = flash_attention(q, k, v, qcfg, spec)
     B, T = x.shape[:2]
     o = o.reshape(B, T, n_heads * d_head)
     return qdense(p["wo"], o, qcfg)
 
 
+def decode_valid_mask(pos: jax.Array, S: int, window: int) -> jax.Array:
+    """Per-row (B, S) cache-slot validity for one-token decode.
+
+    Ring buffer (``window > 0``): slot ``s`` is valid if it was written
+    within the last ``min(pos+1, window)`` steps.  Global cache: positions
+    up to ``pos``.  Shared by the model decode path, the serve engine, and
+    the kernel tests — the mask IS the ring semantics."""
+    pos = jnp.asarray(pos, jnp.int32)
+    kv_pos = jnp.arange(S)
+    if window > 0:
+        slot = pos % S
+        age = (slot[:, None] - kv_pos[None, :]) % S
+        return age <= jnp.minimum(pos, window - 1)[:, None]
+    return kv_pos[None, :] <= pos[:, None]
+
+
 def attention_decode(p, x, cache, *, qcfg: QuantConfig, n_heads: int,
                      n_kv: int, d_head: int, pos: jax.Array,
-                     window: int = 0, rope_theta: float = 1e4,
+                     spec: AttnSpec, rope_theta: float = 1e4,
                      use_rope: bool = True):
     """One-token decode with a (k, v) ring/full cache.
 
-    x: (B, 1, D); cache: {"k": (B, S, Hkv, d), "v": ..., } ;
+    x: (B, 1, D); cache: {"k": (B, S, Hkv, d), "v": ...};
     pos: int32 scalar (whole batch at one position) or (B,) vector — the
     per-row form is what lets the continuous-batching scheduler advance
     slots that sit at different sequence lengths in one fixed-shape step.
-    For windowed layers the cache is a ring buffer of size ``window``.
+    ``spec`` comes from :meth:`AttnSpec.decode`: ``kind="ring"`` layers use
+    a ring buffer of size ``window``; ``kind="causal"`` a global cache.
     """
     B = x.shape[0]
     S = cache["k"].shape[1]
+    window = spec.window if spec.kind == "ring" else 0
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     positions = pos[:, None]
     q, k_new, v_new = _project_qkv(p, x, x, qcfg, n_heads, n_kv, d_head,
@@ -234,33 +195,22 @@ def attention_decode(p, x, cache, *, qcfg: QuantConfig, n_heads: int,
     k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
     v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
     G = n_heads // n_kv
-    qq = _maybe_quant(q[:, 0], qcfg, axis=-1)          # (B, Hkv, G, d)
-    kk = _maybe_quant(k, qcfg, axis=-1)
-    s = jnp.einsum("bhgd,bshd->bhgs", qq.astype(jnp.float32),
-                   kk.astype(jnp.float32)) / math.sqrt(d_head)
-    kv_pos = jnp.arange(S)
-    if window > 0:
-        # Ring buffer: a slot is valid if it was written within the last
-        # min(pos+1, window) steps.
-        age = (slot[:, None] - kv_pos[None, :]) % S
-        valid = age <= jnp.minimum(pos, window - 1)[:, None]
-    else:
-        valid = kv_pos[None, :] <= pos[:, None]
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    pr = jax.nn.softmax(s, axis=-1)
-    prq = _maybe_quant(pr, qcfg, axis=-1)
-    vv = _maybe_quant(v, qcfg, axis=-3)
-    o = jnp.einsum("bhgs,bshd->bhgd", prq, vv.astype(jnp.float32))
+    # Fold to the decode-kernel layout: q (B*Hkv, G, d), k/v (B*Hkv, S, d),
+    # validity replicated per kv head.
+    qf = q[:, 0].reshape(B * n_kv, G, d_head)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * n_kv, S, d_head)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * n_kv, S, v.shape[-1])
+    valid = jnp.repeat(decode_valid_mask(pos, S, window), n_kv, axis=0)
+    o = mx_contract(qf, (kf, vf), qcfg, kind="attn_decode", valid=valid)
     o = o.reshape(B, 1, n_heads * d_head).astype(x.dtype)
+    from .layers import qdense
     out = qdense(p["wo"], o, qcfg)
     return out, {"k": k, "v": v}
 
 
 def attention_prefill(p, x, *, qcfg: QuantConfig, n_heads: int, n_kv: int,
-                      d_head: int, positions, cache_len: int,
-                      window: int = 0, rope_theta: float = 1e4,
-                      use_rope: bool = True, q_chunk: int = 512,
-                      kv_chunk: int = 1024):
+                      d_head: int, positions, spec: AttnSpec,
+                      rope_theta: float = 1e4, use_rope: bool = True):
     """Fused prefill: full-sequence attention + the decode cache in one pass.
 
     Computes exactly what ``attention`` computes for the causal forward (so
@@ -268,16 +218,16 @@ def attention_prefill(p, x, *, qcfg: QuantConfig, n_heads: int, n_kv: int,
     assembles the (k, v) cache that ``attention_decode`` expects: a
     zero-padded (B, cache_len, Hkv, d) buffer for global layers, or the
     ring buffer holding the last ``min(T, window)`` tokens at slots
-    ``pos % ring`` for windowed layers.
+    ``pos % ring`` for windowed layers.  Cache geometry comes from
+    ``spec.cache_len`` / ``spec.window``.
     """
+    from .layers import qdense
     B, T = x.shape[:2]
+    window = spec.window if spec.kind == "window" else 0
+    cache_len = spec.cache_len
     q, k, v = _project_qkv(p, x, x, qcfg, n_heads, n_kv, d_head, positions,
                            None, rope_theta, use_rope=use_rope)
-    if window > 0:
-        o = local_attention(q, k, v, qcfg, window)
-    else:
-        o = flash_attention(q, k, v, qcfg, causal=True, q_chunk=q_chunk,
-                            kv_chunk=kv_chunk)
+    o = flash_attention(q, k, v, qcfg, spec)
     out = qdense(p["wo"], o.reshape(B, T, n_heads * d_head), qcfg)
     ring = min(cache_len, window) if window > 0 else cache_len
     if window > 0:

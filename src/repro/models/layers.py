@@ -14,7 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import QuantConfig, qmatmul, quantize_mx
+from repro.core import QuantConfig, mx_contract, quantize_mx
 
 PARAM_DTYPE = jnp.float32     # master copies live in the optimizer
 COMPUTE_DTYPE = jnp.bfloat16
@@ -62,12 +62,12 @@ def dense_init(key, d_in: int, d_out: int, std: Optional[float] = None,
 def qdense(p, x: jax.Array, qcfg: QuantConfig) -> jax.Array:
     """MX-quantized dense layer. Bias add stays bf16 (vector op).
 
-    The projection runs through `qmatmul`'s custom VJP, so its forward,
-    dgrad, and wgrad GEMMs each hit the fused quantize-on-load Pallas
-    kernels in their per-pass formats (a_fwd/w_fwd, g_bwd/w_bwd,
-    a_bwd/g_bwd) whenever ``qcfg`` is kernel-eligible."""
+    The projection runs through the "dense" custom VJP of `mx_contract`,
+    so its forward, dgrad, and wgrad GEMMs each hit the fused
+    quantize-on-load Pallas kernels in their per-pass formats (a_fwd/w_fwd,
+    g_bwd/w_bwd, a_bwd/g_bwd) whenever ``qcfg`` is kernel-eligible."""
     w = p["w"].astype(x.dtype)
-    y = qmatmul(x, w, qcfg)
+    y = mx_contract(x, w, qcfg, kind="dense")
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y

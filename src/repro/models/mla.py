@@ -14,7 +14,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import QuantConfig, quantize_mx
+from repro.core import AttnSpec, QuantConfig, mx_contract, quantize_mx
 from .layers import dense_init, norm_init, apply_norm, qdense, rope
 from .attention import flash_attention, _maybe_quant, NEG_INF
 
@@ -49,7 +49,7 @@ def _latents(p, x, qcfg, positions, rope_theta):
 
 
 def _forward(p, x, qcfg, n_heads, nope, rope_dim, v_head, positions,
-             rope_theta, q_chunk, kv_chunk):
+             rope_theta, spec):
     """Full-sequence expanded-form attention; also returns the latents."""
     B, T, _ = x.shape
     cq, ckv, kr = _latents(p, x, qcfg, positions, rope_theta)
@@ -62,33 +62,31 @@ def _forward(p, x, qcfg, n_heads, nope, rope_dim, v_head, positions,
     # Layout for flash: every head is its own "kv head" (group G=1).
     qf = jnp.concatenate([q_nope, q_rope], -1)[:, :, :, None, :]  # (B,T,H,1,dqk)
     kf = jnp.concatenate([k_nope, k_rope], -1)      # (B, T, H, dqk)
-    o = flash_attention(qf, kf, v, qcfg, causal=True,
-                        q_chunk=q_chunk, kv_chunk=kv_chunk)
+    o = flash_attention(qf, kf, v, qcfg, spec)
     o = o.reshape(B, T, n_heads * v_head)
     return qdense(p["wo"], o, qcfg), ckv, kr
 
 
 def mla_apply(p, x, *, qcfg: QuantConfig, n_heads: int, nope: int,
-              rope_dim: int, v_head: int, positions,
-              rope_theta: float = 1e4, q_chunk: int = 512,
-              kv_chunk: int = 1024) -> jax.Array:
+              rope_dim: int, v_head: int, positions, spec: AttnSpec,
+              rope_theta: float = 1e4) -> jax.Array:
     return _forward(p, x, qcfg, n_heads, nope, rope_dim, v_head, positions,
-                    rope_theta, q_chunk, kv_chunk)[0]
+                    rope_theta, spec)[0]
 
 
 def mla_prefill(p, x, *, qcfg: QuantConfig, n_heads: int, nope: int,
-                rope_dim: int, v_head: int, positions, cache_len: int,
-                rope_theta: float = 1e4, q_chunk: int = 512,
-                kv_chunk: int = 1024) -> Tuple[jax.Array, dict]:
+                rope_dim: int, v_head: int, positions, spec: AttnSpec,
+                rope_theta: float = 1e4) -> Tuple[jax.Array, dict]:
     """Fused prefill: expanded-form attention + the compressed latent cache
     (what ``mla_decode`` consumes) in one pass.  Scores here use the
     expanded form while decode uses the absorbed form — same math up to
     fp associativity, so parity is tight-tolerance rather than bitwise."""
     B, T, _ = x.shape
+    cache_len = spec.cache_len
     if T > cache_len:
         raise ValueError(f"prompt length {T} exceeds cache_len {cache_len}")
     out, ckv, kr = _forward(p, x, qcfg, n_heads, nope, rope_dim, v_head,
-                            positions, rope_theta, q_chunk, kv_chunk)
+                            positions, rope_theta, spec)
     pad = ((0, 0), (0, cache_len - T), (0, 0))
     return out, {"ckv": jnp.pad(ckv, pad), "kr": jnp.pad(kr, pad)}
 
@@ -129,8 +127,10 @@ def mla_decode(p, x, cache, *, qcfg: QuantConfig, n_heads: int, nope: int,
     valid = jnp.arange(S)[None, :] <= pos[:, None]
     s = jnp.where(valid[:, None, :], s, NEG_INF)
     pr = jax.nn.softmax(s, axis=-1)
-    ctx = jnp.einsum("bhs,bsc->bhc", _maybe_quant(pr, qcfg, -1),
-                     _maybe_quant(ckv, qcfg, -2).astype(jnp.float32))
+    # The latent-space context product is a standard P·V contraction:
+    # route it through the shared dispatcher (pr quantized along the cache
+    # axis per row, ckv along the cache axis per column when qcfg.attn).
+    ctx = mx_contract(pr, ckv.astype(jnp.float32), qcfg, kind="attn_pv")
     w_uv = p["w_uv"]["w"].astype(x.dtype).reshape(kv_lora, n_heads, v_head)
     o = jnp.einsum("bhc,chv->bhv", ctx.astype(x.dtype), w_uv)
     o = o.reshape(B, 1, n_heads * v_head)

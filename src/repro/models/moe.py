@@ -19,7 +19,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import QuantConfig, qeinsum_bmm
+from repro.core import QuantConfig, mx_contract
 from repro.parallel.sharding import shard_spec
 from .layers import trunc_normal
 from .mlp import ACTIVATIONS
@@ -84,13 +84,14 @@ def moe_apply(p, x: jax.Array, qcfg: QuantConfig, *, top_k: int,
     # all-gathers under GSPMD (refuted; §Perf iteration log)
     h_in = shard_spec(h_in, ("model", None, None))
 
-    up = qeinsum_bmm(h_in, p["w_up"].astype(x.dtype), qcfg)
+    up = mx_contract(h_in, p["w_up"].astype(x.dtype), qcfg, kind="bmm")
     if "w_gate" in p:
-        g = qeinsum_bmm(h_in, p["w_gate"].astype(x.dtype), qcfg)
+        g = mx_contract(h_in, p["w_gate"].astype(x.dtype), qcfg, kind="bmm")
         h = (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)) * up
     else:
         h = ACTIVATIONS[act](up)
-    out = qeinsum_bmm(h, p["w_down"].astype(x.dtype), qcfg)     # (E, C, D)
+    out = mx_contract(h, p["w_down"].astype(x.dtype), qcfg,
+                      kind="bmm")                               # (E, C, D)
     out = out * valid[..., None].astype(out.dtype)
 
     # combine: assignment a sits at flat slot sorted_pos[a] in the (E*C)

@@ -13,11 +13,15 @@ entropy streams over token chunks with the LM-head GEMM *inside* the chunk
 loop so full fp32 logits (up to vocab 256k) are never materialized.
 
 Every projection in the stack (attention q/k/v/o, MLP up/gate/down, MoE
-experts, LM head) is a `qmatmul` custom VJP, so a training step's GEMMs —
-forward, dgrad, and wgrad alike — dispatch to the fused MX Pallas kernels
-in the per-pass formats carried by the (static) QuantConfig; remat replays
-the quantized forward kernels during the backward pass, keeping the
-recomputation on the same fused path.
+experts, LM head) is an `mx_contract` custom VJP, so a training step's
+GEMMs — forward, dgrad, and wgrad alike — dispatch to the fused MX Pallas
+kernels in the per-pass formats carried by the (static) QuantConfig; remat
+replays the quantized forward kernels during the backward pass, keeping
+the recomputation on the same fused path.  Attention mixing is described
+per layer by an `AttnSpec` built from the config (`attn_spec` /
+`decode_spec`) and routed through ``mx_contract(kind="flash_attn" |
+"attn_decode")`` — the flash Pallas kernels when fused, the bit-identical
+tile-skipping oracle otherwise.
 """
 from __future__ import annotations
 
@@ -29,7 +33,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import QuantConfig, qmatmul
+from repro.core import AttnSpec, QuantConfig, mx_contract
 from repro.parallel.sharding import shard_act
 from .layers import (COMPUTE_DTYPE, apply_norm, dense_init, embed_init,
                      embed_lookup, norm_init, qdense)
@@ -96,6 +100,24 @@ class LMConfig:
     @property
     def qk_dim(self) -> int:
         return (self.nope_dim + self.rope_dim) if self.mla else self.d_head
+
+    def attn_spec(self, kind: str = "attn", *, causal: bool = True,
+                  cache_len: int = 0) -> AttnSpec:
+        """Training/prefill AttnSpec for a block kind.  Only "attn" blocks
+        honor the local window ("dense_attn" lead layers and MLA attend
+        globally); ``cache_len`` is set for prefill specs."""
+        window = self.window if (kind == "attn" and not self.mla) else 0
+        spec = AttnSpec.training(causal=causal, window=window,
+                                 q_chunk=self.q_chunk,
+                                 kv_chunk=self.kv_chunk)
+        if cache_len:
+            spec = dataclasses.replace(spec, cache_len=cache_len)
+        return spec
+
+    def decode_spec(self, kind: str = "attn", cache_len: int = 0) -> AttnSpec:
+        """One-token decode AttnSpec (ring buffer for windowed layers)."""
+        window = self.window if (kind == "attn" and not self.mla) else 0
+        return AttnSpec.decode(window=window, cache_len=cache_len)
 
     def param_count(self, active_only: bool = False) -> int:
         """Analytic parameter count (total, or active-per-token for MoE)."""
@@ -218,23 +240,24 @@ def _block_apply(h, p, kind: str, cfg: LMConfig, qcfg: QuantConfig,
             a = mla_apply(p["attn"], hn, qcfg=qcfg, n_heads=cfg.n_heads,
                           nope=cfg.nope_dim, rope_dim=cfg.rope_dim,
                           v_head=cfg.v_head, positions=positions,
-                          rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk,
-                          kv_chunk=cfg.kv_chunk)
+                          spec=cfg.attn_spec(kind),
+                          rope_theta=cfg.rope_theta)
         else:
             a = attention(p["attn"], hn, qcfg=qcfg, n_heads=cfg.n_heads,
                           n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
                           positions=positions,
-                          causal=(kind != "enc_attn"),
-                          window=cfg.window if kind == "attn" else 0,
-                          rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk,
-                          kv_chunk=cfg.kv_chunk)
+                          spec=cfg.attn_spec(
+                              kind, causal=(kind != "enc_attn")),
+                          rope_theta=cfg.rope_theta)
         h = h + a
         if kind == "dec_attn":
             hx = apply_norm(p["ln_x"], h, qcfg, cfg.norm)
             h = h + attention(p["xattn"], hx, qcfg=qcfg, n_heads=cfg.n_heads,
                               n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
                               positions=positions, xkv=enc_out,
-                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+                              spec=AttnSpec.training(
+                                  causal=False, q_chunk=cfg.q_chunk,
+                                  kv_chunk=cfg.kv_chunk))
         hn2 = apply_norm(p["ln2"], h, qcfg, cfg.norm)
         if "moe" in p:
             B, T, D = hn2.shape
@@ -385,7 +408,7 @@ def lm_apply(params, batch, cfg: LMConfig, qcfg: QuantConfig):
 def _head_matmul(params, h, cfg, qcfg):
     if cfg.tie_embeddings:
         w = params["embed"]["table"].astype(h.dtype).T
-        return qmatmul(h, w, qcfg)
+        return mx_contract(h, w, qcfg, kind="dense")
     return qdense(params["lm_head"], h, qcfg)
 
 
@@ -488,8 +511,7 @@ def _block_decode(h, p, cache, kind, cfg, qcfg, pos, enc_out=None):
             a, new_cache = attention_decode(
                 p["attn"], hn, cache, qcfg=qcfg, n_heads=cfg.n_heads,
                 n_kv=cfg.n_kv_heads, d_head=cfg.d_head, pos=pos,
-                window=cfg.window if kind == "attn" else 0,
-                rope_theta=cfg.rope_theta)
+                spec=cfg.decode_spec(kind), rope_theta=cfg.rope_theta)
         h = h + a
         if kind == "dec_attn" and enc_out is not None:
             hx = apply_norm(p["ln_x"], h, qcfg, cfg.norm)
@@ -499,7 +521,9 @@ def _block_decode(h, p, cache, kind, cfg, qcfg, pos, enc_out=None):
             h = h + attention(p["xattn"], hx, qcfg=qcfg, n_heads=cfg.n_heads,
                               n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
                               positions=positions, xkv=enc_out,
-                              q_chunk=1, kv_chunk=cfg.kv_chunk)
+                              spec=AttnSpec.training(
+                                  causal=False, q_chunk=1,
+                                  kv_chunk=cfg.kv_chunk))
         hn2 = apply_norm(p["ln2"], h, qcfg, cfg.norm)
         if "moe" in p:
             B = h.shape[0]
@@ -590,16 +614,14 @@ def _block_prefill(h, p, kind, cfg: LMConfig, qcfg: QuantConfig, positions,
             a, nc = mla_prefill(p["attn"], hn, qcfg=qcfg, n_heads=cfg.n_heads,
                                 nope=cfg.nope_dim, rope_dim=cfg.rope_dim,
                                 v_head=cfg.v_head, positions=positions,
-                                cache_len=cache_len, rope_theta=cfg.rope_theta,
-                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+                                spec=cfg.attn_spec(kind, cache_len=cache_len),
+                                rope_theta=cfg.rope_theta)
         else:
             a, nc = attention_prefill(
                 p["attn"], hn, qcfg=qcfg, n_heads=cfg.n_heads,
                 n_kv=cfg.n_kv_heads, d_head=cfg.d_head, positions=positions,
-                cache_len=cache_len,
-                window=cfg.window if kind == "attn" else 0,
-                rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk,
-                kv_chunk=cfg.kv_chunk)
+                spec=cfg.attn_spec(kind, cache_len=cache_len),
+                rope_theta=cfg.rope_theta)
         h = h + a
         hn2 = apply_norm(p["ln2"], h, qcfg, cfg.norm)
         if "moe" in p:

@@ -205,3 +205,107 @@ def test_qlinear_fused_step_matches_emulation(preset_name):
         g_fused = jax.grad(loss)(params, x)
     jax.tree.map(lambda a, b: np.testing.assert_array_equal(
         np.asarray(a), np.asarray(b)), g_fused, g_emul)
+
+
+# ---------------------------------------------------------------------------
+# Flash-attention kernel family vs jnp oracle (bit-exact, interpret mode)
+# ---------------------------------------------------------------------------
+from repro.core import AttnSpec  # noqa: E402
+from repro.kernels import (mx_attention_decode, mx_attention_decode_ref,  # noqa: E402
+                           mx_flash_attention, mx_flash_attention_bwd,
+                           mx_flash_attention_bwd_ref, mx_flash_attention_ref)
+
+ATTN_SPECS = [
+    AttnSpec.training(q_chunk=64, kv_chunk=64),
+    AttnSpec.training(causal=False, q_chunk=64, kv_chunk=64),
+    AttnSpec.training(window=48, q_chunk=64, kv_chunk=64),
+]
+
+
+def _attn_qkv(bh=2, g=2, tq=160, tk=160, d=64, dv=64, seed=0):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(bh, g, tq, d).astype(np.float32))
+    k = jnp.asarray(rng.randn(bh, tk, d).astype(np.float32))
+    v = jnp.asarray(rng.randn(bh, tk, dv).astype(np.float32))
+    do = jnp.asarray(rng.randn(bh, g, tq, dv).astype(np.float32))
+    return q, k, v, do
+
+
+@pytest.mark.parametrize("fmt", [None, E4M3], ids=["bf16", "e4m3"])
+@pytest.mark.parametrize("spec", ATTN_SPECS, ids=lambda s: s.kind)
+def test_attention_fwd_kernel_bit_identical_to_oracle(spec, fmt):
+    """Tq=Tk=160 is not a tile multiple: the pad path is covered too."""
+    q, k, v, _ = _attn_qkv()
+    o_k, l_k = mx_flash_attention(q, k, v, fmt, spec)
+    o_r, l_r = mx_flash_attention_ref(q, k, v, fmt, spec)
+    np.testing.assert_array_equal(np.asarray(o_k), np.asarray(o_r))
+    np.testing.assert_array_equal(np.asarray(l_k), np.asarray(l_r))
+
+
+@pytest.mark.parametrize("fmt", [None, E4M3], ids=["bf16", "e4m3"])
+@pytest.mark.parametrize("spec", ATTN_SPECS, ids=lambda s: s.kind)
+def test_attention_dgrad_kernel_bit_identical_to_oracle(spec, fmt):
+    q, k, v, do = _attn_qkv()
+    out, lse = mx_flash_attention_ref(q, k, v, fmt, spec)
+    g_k = mx_flash_attention_bwd(q, k, v, do, out, lse, fmt, spec)
+    g_r = mx_flash_attention_bwd_ref(q, k, v, do, out, lse, fmt, spec)
+    for a, b, name in zip(g_k, g_r, ("dq", "dk", "dv")):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_attention_kernel_rect_with_offset():
+    """Tq != Tk with a query-position offset (the prefill-continuation
+    shape): kernel must agree with the oracle bitwise."""
+    spec = AttnSpec.training(q_chunk=64, kv_chunk=64, q_offset=64)
+    q, k, v, do = _attn_qkv(tq=96, tk=160)
+    o_k, l_k = mx_flash_attention(q, k, v, E4M3, spec)
+    o_r, l_r = mx_flash_attention_ref(q, k, v, E4M3, spec)
+    np.testing.assert_array_equal(np.asarray(o_k), np.asarray(o_r))
+    g_k = mx_flash_attention_bwd(q, k, v, do, o_r, l_r, E4M3, spec)
+    g_r = mx_flash_attention_bwd_ref(q, k, v, do, o_r, l_r, E4M3, spec)
+    for a, b in zip(g_k, g_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("fmt", [None, E4M3], ids=["bf16", "e4m3"])
+def test_attention_decode_kernel_bit_identical_to_oracle(fmt):
+    q, k, v, _ = _attn_qkv(tk=160)
+    qd = q[:, :, 0]
+    valid = jnp.arange(160)[None, :] <= jnp.asarray([[80], [159]])
+    o_k = mx_attention_decode(qd, k, v, valid, fmt)
+    o_r = mx_attention_decode_ref(qd, k, v, valid, fmt)
+    np.testing.assert_array_equal(np.asarray(o_k), np.asarray(o_r))
+
+
+def test_attention_kernel_non_block_head_dim_falls_back():
+    """d=48 is not an MX-block multiple: the dispatch wrapper must fall
+    back to the oracle rather than mis-tile the quantization."""
+    spec = AttnSpec.training(q_chunk=64, kv_chunk=64)
+    q, k, v, _ = _attn_qkv(d=48)
+    o_k, l_k = mx_flash_attention(q, k, v, E4M3, spec)
+    o_r, l_r = mx_flash_attention_ref(q, k, v, E4M3, spec)
+    np.testing.assert_array_equal(np.asarray(o_k), np.asarray(o_r))
+    np.testing.assert_array_equal(np.asarray(l_k), np.asarray(l_r))
+
+
+@pytest.mark.parametrize("preset_name", ["mxfp8_e4m3", "bf16"])
+def test_flash_attn_contract_fused_grads_match_emulation(preset_name):
+    """Value AND grads of mx_contract(kind="flash_attn") are bit-identical
+    between the fused kernel path and the emulation path — both sides of
+    the custom VJP share the same oracle numerics."""
+    from repro.core import mx_contract
+    cfg = preset(preset_name) if preset_name != "bf16" else QuantConfig.bf16()
+    spec = AttnSpec.training(q_chunk=64, kv_chunk=64)
+    q, k, v, do = _attn_qkv(tq=96, tk=96)
+
+    def loss(q, k, v):
+        out = mx_contract(q, (k, v), cfg, kind="flash_attn", spec=spec)
+        return jnp.sum(out * do)
+
+    val_e, g_e = jax.value_and_grad(loss, argnums=(0, 1, 2))(q, k, v)
+    with use_fused_gemms(True):
+        val_f, g_f = jax.value_and_grad(loss, argnums=(0, 1, 2))(q, k, v)
+    np.testing.assert_array_equal(np.asarray(val_f), np.asarray(val_e))
+    for a, b in zip(g_f, g_e):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

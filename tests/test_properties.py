@@ -20,6 +20,7 @@ pytest.importorskip(
     reason="property tests need hypothesis (pip install -e .[test])")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core import SpikeDetector, get_format, quantize_mx  # noqa: E402
@@ -238,3 +239,52 @@ def test_guard_rule_budget_bounds_escalations(trace, budget):
         state, dec = decide(pol, state, t, {"x": v})
         n_esc += dec is not None and dec.kind == "escalate"
     assert n_esc <= budget
+
+
+# ---------------------------------------------------------------------------
+# Flash-attention kernel == oracle for arbitrary (non-multiple) Tq/Tk
+# ---------------------------------------------------------------------------
+@given(tq=st.integers(1, 70), tk=st.integers(1, 70),
+       causal=st.booleans(), quant=st.booleans(), data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_flash_attention_kernel_equals_oracle_any_shape(tq, tk, causal,
+                                                        quant, data):
+    """The Pallas flash kernel (interpret mode) must match the jnp oracle
+    for arbitrary Tq/Tk — including shapes that are not tile multiples
+    (padding), Tq > Tk with a query offset, and fully masked rows.
+
+    Tolerance note: at VPU-aligned tiles the match is bitwise (enforced in
+    test_kernels.py), but for degenerate shapes (e.g. tile_q == 1) XLA:CPU
+    may route exp/log through vectorized packet math on one side and a
+    scalar remainder loop on the other, which differ by up to 1 ulp.
+    Unquantized, that stays a 1-ulp output difference, so a 2-ulp bound
+    applies.  Quantized, a 1-ulp difference in p can cross an e4m3
+    rounding boundary and flip one mantissa step (2^-3 relative), so for
+    MX formats the property asserts a tight logsumexp bound (the score
+    path — any masking/tiling/offset defect lands here as an O(1) error)
+    plus a small relative-Frobenius bound on the output (rounding-flip
+    noise is ~1e-2; a wrong-tile PV bug is O(1)).  The oracle is jitted so
+    both sides share one compilation regime — eager-vs-jit already differs
+    at the same amplified scale for the oracle alone.
+    """
+    from repro.core import AttnSpec, E4M3
+    from repro.kernels import mx_flash_attention, mx_flash_attention_ref
+    q_offset = data.draw(st.integers(0, 16)) if causal else 0
+    spec = AttnSpec.training(causal=causal, window=0, q_chunk=32,
+                             kv_chunk=32, q_offset=q_offset)
+    rng = np.random.RandomState(data.draw(st.integers(0, 2 ** 16)))
+    d = 32
+    q = jnp.asarray(rng.randn(1, 2, tq, d).astype(np.float32))
+    k = jnp.asarray(rng.randn(1, tk, d).astype(np.float32))
+    v = jnp.asarray(rng.randn(1, tk, d).astype(np.float32))
+    fmt = E4M3 if quant else None
+    oracle = jax.jit(mx_flash_attention_ref, static_argnames=("fmt", "spec"))
+    o_k, l_k = mx_flash_attention(q, k, v, fmt, spec)
+    o_r, l_r = oracle(q, k, v, fmt, spec)
+    o_k, l_k, o_r, l_r = (np.asarray(x) for x in (o_k, l_k, o_r, l_r))
+    np.testing.assert_allclose(l_k, l_r, rtol=3e-7, atol=1e-5)
+    if fmt is None:
+        np.testing.assert_allclose(o_k, o_r, rtol=3e-7, atol=3e-7)
+    else:
+        denom = max(float(np.linalg.norm(o_r)), 1e-30)
+        assert float(np.linalg.norm(o_k - o_r)) / denom < 0.05

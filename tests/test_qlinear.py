@@ -113,3 +113,80 @@ def test_ln_affine_quantization_collapses_clustered_scale():
     # unquantized path: exact affine
     np.testing.assert_allclose(np.asarray(y_ok), xn * scale, rtol=1e-3,
                                atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mx_contract dispatcher + deprecation shims
+# ---------------------------------------------------------------------------
+def test_mx_contract_unknown_kind_lists_valid_kinds():
+    import pytest
+    from repro.core import mx_contract
+    cfg = preset("mxfp8_e4m3")
+    x = jax.random.normal(K, (8, 64))
+    with pytest.raises(ValueError, match="flash_attn"):
+        mx_contract(x, x, cfg, kind="nope")
+
+
+def test_qmatmul_shim_bit_identical_and_warns():
+    import pytest
+    from repro.core import mx_contract
+    cfg = preset("mxfp8_e4m3")
+    x = jax.random.normal(K, (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32)) * 0.1
+    with pytest.deprecated_call():
+        y_old = qmatmul(x, w, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(y_old), np.asarray(mx_contract(x, w, cfg, kind="dense")))
+
+
+def test_qeinsum_bmm_shim_bit_identical_and_warns():
+    import pytest
+    from repro.core import mx_contract
+    from repro.core.qlinear import qeinsum_bmm
+    cfg = preset("mxfp8_e4m3")
+    a = jax.random.normal(K, (4, 8, 64))
+    b = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 32)) * 0.1
+    with pytest.deprecated_call():
+        y_old = qeinsum_bmm(a, b, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(y_old), np.asarray(mx_contract(a, b, cfg, kind="bmm")))
+
+
+def test_qdot_attn_shim_bit_identical_and_warns():
+    import pytest
+    from repro.core import mx_contract
+    from repro.core.qlinear import qdot_attn
+    cfg = preset("mxfp8_e4m3")
+    p = jax.nn.softmax(jax.random.normal(K, (4, 16, 64)), axis=-1)
+    v = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 32))
+    with pytest.deprecated_call():
+        y_old = qdot_attn(p, v, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(y_old), np.asarray(mx_contract(p, v, cfg,
+                                                  kind="attn_pv")))
+
+
+def test_attn_kinds_respect_attn_toggle():
+    """qcfg.attn=False must make the attention BMM kinds pure bf16 passes
+    (no quantization) even when a_fwd is set."""
+    from repro.core import mx_contract
+    import dataclasses
+    cfg = preset("mxfp8_e4m3")
+    cfg_off = dataclasses.replace(cfg, attn=False)
+    p = jax.nn.softmax(jax.random.normal(K, (4, 16, 64)), axis=-1)
+    v = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 32))
+    y_off = mx_contract(p, v, cfg_off, kind="attn_pv")
+    np.testing.assert_allclose(np.asarray(y_off),
+                               np.asarray(jnp.matmul(p, v)), rtol=1e-6)
+    y_on = mx_contract(p, v, cfg, kind="attn_pv")
+    assert np.abs(np.asarray(y_on) - np.asarray(y_off)).max() > 0
+
+
+def test_flash_attn_kind_requires_spec():
+    import pytest
+    from repro.core import mx_contract
+    cfg = preset("mxfp8_e4m3")
+    q = jax.random.normal(K, (2, 1, 32, 64))
+    kv = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 64))
+    with pytest.raises(ValueError, match="spec"):
+        mx_contract(q, (kv, kv), cfg, kind="flash_attn")
