@@ -1,21 +1,35 @@
-"""Serving throughput: fused vs token-stepped prefill + engine decode.
+"""Serving throughput: fused prefill, engine decode, paged-vs-slab trace.
 
   PYTHONPATH=src python -m benchmarks.serve_throughput [--smoke]
                                                        [--budget quick|full]
+                                                       [--trace-out F.json]
 
 Rows (CSV ``name,us_per_call,derived``):
 
   serve.prefill_fused.<preset>    one `lm_prefill` pass       tok/s
   serve.prefill_stepped.<preset>  T jitted decode steps       tok/s
   serve.decode.<preset>           continuous-batching engine  tok/s
+  serve.trace_slab.<preset>       bursty mixed-length trace   decode tok/s
+  serve.trace_paged.<preset>      same trace, paged engine    decode tok/s
 
-``--smoke`` (CI) runs one preset at T=128 and **fails** unless the fused
-prefill is strictly faster than token-stepping — the acceptance bar for
-the fused path (a single traced forward vs T dispatched steps).
+The trace pair is **memory-equalized**: both engines get the same KV
+token budget (slab ``max_batch * max_len`` == paged ``n_pages *
+page_size``), so the paged engine's edge is purely packing — a request
+maps only the pages its length needs, so the same budget holds more
+concurrent mixed-length requests (plus prefix sharing across the ~1/3 of
+the trace that reuses a common system-prompt page).
+
+``--smoke`` (CI) runs one preset and **fails** unless (a) the fused
+prefill is strictly faster than token-stepping at T=128, and (b) the
+paged engine's aggregate decode tok/s on the bursty trace is at least
+1.5x the slab engine's under the equal token budget — the acceptance bar
+for the paged KV cache.  ``--trace-out`` dumps both engines' trace stats
+as JSON (uploaded as a CI artifact).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 import jax
@@ -25,12 +39,24 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import preset
 from repro.models import lm_init, lm_prefill
-from repro.serve import SamplingParams, ServeEngine, prefill_into_cache
+from repro.serve import (PagedServeEngine, SamplingParams, ServeEngine,
+                         prefill_into_cache)
 from repro.serve.engine import _prefill
 from .common import Row, emit, time_fn
 
 PRESETS = ("bf16", "e4m3_bf16act", "mxfp8_e4m3")
 ARCH = "qwen2-7b"
+
+# Equal KV token budgets: slab 2 x 256 == paged 16 x 32 == 512 positions.
+# max_len is set by the longest request (~224 positions), so every slab
+# row must reserve 256 slots however short its request — the paged engine
+# maps pages per actual length and packs ~3x the concurrency.
+TRACE_MAX_LEN = 256
+SLAB_BATCH = 2
+PAGED_BATCH = 6
+N_PAGES = 16
+PAGE_SIZE = 32
+TRACE_GATE = 1.5
 
 
 def _prefill_rows(params, cfg, qcfg, name: str, T: int, iters: int):
@@ -64,6 +90,73 @@ def _decode_row(params, cfg, qcfg, name: str, n_req: int, new_tokens: int):
                f"lat={s['mean_latency_s'] * 1e3:.0f}ms")
 
 
+# ---------------------------------------------------------------------------
+# bursty mixed-length trace: paged vs slab under an equal token budget
+# ---------------------------------------------------------------------------
+def _bursty_trace(vocab: int, n_req: int):
+    """Bimodal prompt lengths (chat-style shorts + document-style longs)
+    submitted in one burst; every third request opens with the same
+    32-token "system prompt" page (exercises the prefix cache)."""
+    rng = np.random.RandomState(17)
+    prefix = rng.randint(1, vocab, size=PAGE_SIZE)
+    trace = []
+    for i in range(n_req):
+        if i % 3 == 0:
+            body = rng.randint(1, vocab, size=int(rng.randint(8, 24)))
+            prompt = np.concatenate([prefix, body])
+        elif i % 3 == 1:
+            prompt = rng.randint(1, vocab, size=int(rng.randint(6, 16)))
+        else:
+            prompt = rng.randint(1, vocab, size=int(rng.randint(120, 200)))
+        trace.append((prompt, SamplingParams(
+            max_new_tokens=24 if i % 2 == 0 else 8, seed=i)))
+    return trace
+
+
+def _run_trace(engine, trace):
+    for prompt, sp in trace:
+        engine.submit(prompt, sp)
+    engine.drain()
+    return engine.stats()
+
+
+def _trace_pair(params, cfg, qcfg, name: str, n_req: int):
+    """Run the bursty trace through both engines (after a 2-request warmup
+    per engine type so jit compilation stays out of the timings — the
+    module-level trace caches are shared across engine instances)."""
+    trace = _bursty_trace(cfg.vocab, n_req)
+    warm = _bursty_trace(cfg.vocab, 2)
+
+    def slab():
+        return ServeEngine(params, cfg, qcfg, max_batch=SLAB_BATCH,
+                           max_len=TRACE_MAX_LEN)
+
+    def paged():
+        return PagedServeEngine(params, cfg, qcfg, max_batch=PAGED_BATCH,
+                                max_len=TRACE_MAX_LEN, n_pages=N_PAGES,
+                                page_size=PAGE_SIZE)
+
+    _run_trace(slab(), warm)
+    _run_trace(paged(), warm)
+    s = _run_trace(slab(), trace)
+    p = _run_trace(paged(), trace)
+    speedup = p["decode_tok_s"] / max(s["decode_tok_s"], 1e-9)
+    rows = [
+        Row(f"serve.trace_slab.{name}",
+            s["decode_time_s"] / max(s["decode_steps"], 1) * 1e6,
+            f"batch<={SLAB_BATCH} len={TRACE_MAX_LEN} "
+            f"{s['decode_tok_s']:.0f}tok/s"),
+        Row(f"serve.trace_paged.{name}",
+            p["decode_time_s"] / max(p["decode_steps"], 1) * 1e6,
+            f"batch<={PAGED_BATCH} pages={N_PAGES}x{PAGE_SIZE} "
+            f"{p['decode_tok_s']:.0f}tok/s speedup={speedup:.2f}x "
+            f"hits={p['prefix_hits']:.0f} preempt={p['preemptions']:.0f}"),
+    ]
+    return rows, {"preset": name, "n_req": n_req,
+                  "token_budget": N_PAGES * PAGE_SIZE,
+                  "slab": s, "paged": p, "speedup": speedup}
+
+
 def run(budget: str = "quick"):
     T = 128 if budget == "quick" else 512
     iters = 3 if budget == "quick" else 10
@@ -76,6 +169,9 @@ def run(budget: str = "quick"):
         rows.extend(pr)
         rows.append(_decode_row(params, cfg, qcfg, name, n_req=6,
                                 new_tokens=16 if budget == "quick" else 64))
+        tr, _ = _trace_pair(params, cfg, qcfg, name,
+                            n_req=12 if budget == "quick" else 32)
+        rows.extend(tr)
     return rows
 
 
@@ -83,26 +179,53 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", default="quick", choices=["quick", "full"])
     ap.add_argument("--smoke", action="store_true",
-                    help="CI gate: fused prefill must beat token-stepping "
-                         "at T=128 on one preset")
+                    help="CI gate: fused prefill beats token-stepping AND "
+                         f"paged decode >= {TRACE_GATE}x slab on the "
+                         "memory-equalized bursty trace")
+    ap.add_argument("--trace-out", default=None,
+                    help="write paged-vs-slab trace stats JSON here")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.smoke:
         cfg = get_config(ARCH, "smoke")
         params = lm_init(jax.random.PRNGKey(0), cfg)
+        qcfg = preset("e4m3_bf16act")
         rows, fused_us, stepped_us = _prefill_rows(
-            params, cfg, preset("e4m3_bf16act"), "e4m3_bf16act", T=128,
-            iters=3)
+            params, cfg, qcfg, "e4m3_bf16act", T=128, iters=3)
         emit(rows)
+        trace_rows, stats = _trace_pair(params, cfg, qcfg, "e4m3_bf16act",
+                                        n_req=18)
+        emit(trace_rows)
+        if args.trace_out:
+            with open(args.trace_out, "w") as f:
+                json.dump(stats, f, indent=2, sort_keys=True)
+        ok = True
         if not fused_us < stepped_us:
             print(f"# FAIL: fused prefill ({fused_us:.0f}us) not faster "
                   f"than token-stepping ({stepped_us:.0f}us) at T=128",
                   flush=True)
+            ok = False
+        if not stats["speedup"] >= TRACE_GATE:
+            print(f"# FAIL: paged decode {stats['speedup']:.2f}x slab on "
+                  f"the bursty trace (gate {TRACE_GATE}x at equal "
+                  f"{N_PAGES * PAGE_SIZE}-token KV budget)", flush=True)
+            ok = False
+        if not ok:
             sys.exit(1)
         print(f"# smoke ok: fused prefill {stepped_us / fused_us:.1f}x "
-              "faster than token-stepping at T=128", flush=True)
+              f"faster than token-stepping; paged decode "
+              f"{stats['speedup']:.2f}x slab on the bursty trace "
+              f"(gate {TRACE_GATE}x)", flush=True)
         return
-    emit(run(args.budget))
+    rows = run(args.budget)
+    emit(rows)
+    if args.trace_out:
+        cfg = get_config(ARCH, "smoke")
+        params = lm_init(jax.random.PRNGKey(0), cfg)
+        _, stats = _trace_pair(params, cfg, preset("e4m3_bf16act"),
+                               "e4m3_bf16act", n_req=18)
+        with open(args.trace_out, "w") as f:
+            json.dump(stats, f, indent=2, sort_keys=True)
 
 
 if __name__ == "__main__":

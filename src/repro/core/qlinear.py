@@ -28,6 +28,12 @@ contraction in the codebase, dispatching on ``kind``:
   "attn_decode"  the Tq=1 serve-path shape q (BH,G,d) x (k,v) (BH,S,·) with
                  a precomputed (BH,S) validity mask (ring-buffer or global
                  cache semantics live in the mask).
+  "attn_decode_paged"
+                 the same Tq=1 shape against (N, ps, H, ·) page pools: rhs
+                 is the (k_pool, v_pool) pair, ``pages`` the (B, P) int32
+                 page table, and ``valid`` a (B, P*ps) per-view mask.  The
+                 fused path scalar-prefetches the page table so the gather
+                 happens in the kernel's BlockSpec index maps.
 
 Each contraction quantizes its operands along *its own* contraction axis so
 the shared scales factor out of every dot product (App. A).  Residuals keep
@@ -236,12 +242,12 @@ def _register(kind: str):
 
 
 @_register("dense")
-def _kind_dense(lhs, rhs, cfg, *, spec, valid):
+def _kind_dense(lhs, rhs, cfg, *, spec, valid, pages):
     return _dense(lhs, rhs, cfg)
 
 
 @_register("bmm")
-def _kind_bmm(lhs, rhs, cfg, *, spec, valid):
+def _kind_bmm(lhs, rhs, cfg, *, spec, valid, pages):
     assert rhs.ndim == 3 and lhs.ndim >= 3
     lead = lhs.shape[:-3]
     xf = lhs.reshape((-1,) + lhs.shape[-3:]) if lead else lhs[None]
@@ -251,7 +257,7 @@ def _kind_bmm(lhs, rhs, cfg, *, spec, valid):
     return out.reshape(lead + out.shape[1:]) if lead else out[0]
 
 
-def _kind_attn_bmm(lhs, rhs, cfg, *, spec, valid):
+def _kind_attn_bmm(lhs, rhs, cfg, *, spec, valid, pages):
     if not cfg.attn:
         return _mm(lhs, rhs, lhs.dtype)
     aq = quantize_mx(lhs, cfg.a_fwd, axis=-1, block=cfg.block,
@@ -266,7 +272,7 @@ _register("attn_pv")(_kind_attn_bmm)
 
 
 @_register("flash_attn")
-def _kind_flash(lhs, rhs, cfg, *, spec, valid):
+def _kind_flash(lhs, rhs, cfg, *, spec, valid, pages):
     if spec is None:
         raise ValueError("kind='flash_attn' requires spec=AttnSpec(...)")
     k, v = rhs
@@ -274,7 +280,7 @@ def _kind_flash(lhs, rhs, cfg, *, spec, valid):
 
 
 @_register("attn_decode")
-def _kind_decode(lhs, rhs, cfg, *, spec, valid):
+def _kind_decode(lhs, rhs, cfg, *, spec, valid, pages):
     if valid is None:
         raise ValueError("kind='attn_decode' requires valid=(BH, S) mask")
     k, v = rhs
@@ -287,21 +293,39 @@ def _kind_decode(lhs, rhs, cfg, *, spec, valid):
         lhs, k, v, valid, fmt, block=cfg.block, scale_mode=cfg.scale_mode)
 
 
+@_register("attn_decode_paged")
+def _kind_decode_paged(lhs, rhs, cfg, *, spec, valid, pages):
+    if valid is None or pages is None:
+        raise ValueError("kind='attn_decode_paged' requires valid=(B, P*ps) "
+                         "mask and pages=(B, P) page table")
+    k_pool, v_pool = rhs
+    fmt = _attn_fmt(cfg)
+    if _attn_fused(cfg):
+        return _kernels().mx_attention_decode_paged(
+            lhs, k_pool, v_pool, pages, valid, fmt, block=cfg.block,
+            scale_mode=cfg.scale_mode)
+    return _kernels().mx_attention_decode_paged_ref(
+        lhs, k_pool, v_pool, pages, valid, fmt, block=cfg.block,
+        scale_mode=cfg.scale_mode)
+
+
 def mx_contract(lhs, rhs, cfg: QuantConfig, *, kind: str = "dense",
                 spec: Optional[AttnSpec] = None,
-                valid: Optional[jax.Array] = None) -> jax.Array:
+                valid: Optional[jax.Array] = None,
+                pages: Optional[jax.Array] = None) -> jax.Array:
     """Quantized contraction, dispatched on ``kind`` (see module docstring).
 
     ``rhs`` is a single array for the GEMM/BMM kinds and a ``(k, v)`` pair
     for the attention kinds; ``spec`` parameterizes flash-attention masking
-    and tiling; ``valid`` is the decode-cache validity mask."""
+    and tiling; ``valid`` is the decode-cache validity mask; ``pages`` is
+    the (B, P) page table for the paged decode kind."""
     try:
         impl = _CONTRACT_KINDS[kind]
     except KeyError:
         raise ValueError(
             f"unknown mx_contract kind {kind!r}; "
             f"expected one of {sorted(_CONTRACT_KINDS)}") from None
-    return impl(lhs, rhs, cfg, spec=spec, valid=valid)
+    return impl(lhs, rhs, cfg, spec=spec, valid=valid, pages=pages)
 
 
 # ---------------------------------------------------------------------------

@@ -23,17 +23,20 @@ the serve engine, and the training loop run fully fused quantized steps on
 TPU; off-TPU the same kernels run under the Pallas interpreter for tests
 and CI.
 """
-from .ops import (mx_attention_decode, mx_flash_attention,
-                  mx_flash_attention_bwd, mx_matmul, mx_matmul_dgrad,
-                  mx_matmul_wgrad, mx_quantize)
-from .ref import (mx_attention_decode_ref, mx_flash_attention_bwd_ref,
+from .ops import (mx_attention_decode, mx_attention_decode_paged,
+                  mx_flash_attention, mx_flash_attention_bwd, mx_matmul,
+                  mx_matmul_dgrad, mx_matmul_wgrad, mx_quantize)
+from .ref import (gather_pages, mx_attention_decode_paged_ref,
+                  mx_attention_decode_ref, mx_flash_attention_bwd_ref,
                   mx_flash_attention_ref, mx_matmul_dgrad_ref, mx_matmul_ref,
                   mx_matmul_wgrad_ref, mx_quantize_ref)
 
 __all__ = [
     "mx_matmul", "mx_matmul_dgrad", "mx_matmul_wgrad", "mx_quantize",
     "mx_flash_attention", "mx_flash_attention_bwd", "mx_attention_decode",
+    "mx_attention_decode_paged",
     "mx_matmul_ref", "mx_matmul_dgrad_ref", "mx_matmul_wgrad_ref",
     "mx_quantize_ref", "mx_flash_attention_ref", "mx_flash_attention_bwd_ref",
-    "mx_attention_decode_ref",
+    "mx_attention_decode_ref", "mx_attention_decode_paged_ref",
+    "gather_pages",
 ]

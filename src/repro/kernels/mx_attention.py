@@ -60,7 +60,8 @@ from .mx_quant import _quantize_block_tile
 from .ref import NEG_INF, attn_tile_mask, attn_tile_needed
 
 __all__ = ["mx_attn_fwd_pallas", "mx_attn_bwd_pallas",
-           "mx_attn_decode_pallas", "attn_tiles"]
+           "mx_attn_decode_pallas", "mx_attn_decode_paged_pallas",
+           "attn_tiles"]
 
 
 def attn_tiles(spec: AttnSpec, Tq: int, Tk: int):
@@ -352,14 +353,22 @@ def mx_attn_bwd_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
 def _mx_attn_decode_kernel(q_ref, k_ref, v_ref, msk_ref, o_ref, *,
                            fmt: Optional[ElementFormat], block: int,
                            scale: float):
-    qt = q_ref[0].astype(jnp.float32)       # (G, d)
-    kt = k_ref[0].astype(jnp.float32)       # (S, d)
-    vt = v_ref[0].astype(jnp.float32)       # (S, dv)
+    o_ref[0] = _mx_attn_decode_body(
+        q_ref[0].astype(jnp.float32),       # (G, d)
+        k_ref[0].astype(jnp.float32),       # (S, d)
+        v_ref[0].astype(jnp.float32),       # (S, dv)
+        msk_ref[0] != 0,                    # (1, S)
+        fmt=fmt, block=block, scale=scale, out_dtype=o_ref.dtype)
+
+
+def _mx_attn_decode_body(qt, kt, vt, ok, *, fmt, block, scale, out_dtype):
+    """Shared decode compute (explicit softmax over the full cache view) —
+    called on contiguous slab tiles and on the page-assembled scratch alike
+    so the two kernels cannot drift numerically."""
     qq = _quant(qt, fmt, block)
     kk = _quant(kt, fmt, block)
     s = jax.lax.dot_general(qq, kk, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    ok = msk_ref[0] != 0                    # (1, S)
     s = jnp.where(ok, s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.where(ok, jnp.exp(s - m), 0.0)
@@ -367,9 +376,79 @@ def _mx_attn_decode_kernel(q_ref, k_ref, v_ref, msk_ref, o_ref, *,
     pr = p / jnp.maximum(l, 1e-30)
     prq = _quant(pr, fmt, block)            # blocks along the cache axis
     vv = _quant_rows(vt, fmt, block)        # blocks along the cache axis
-    o_ref[0] = jax.lax.dot_general(
+    return jax.lax.dot_general(
         prq, vv, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+        preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def _mx_attn_decode_paged_kernel(ptc_ref, q_ref, k_ref, v_ref, msk_ref,
+                                 o_ref, k_scr, v_scr, *,
+                                 fmt: Optional[ElementFormat], block: int,
+                                 scale: float, ps: int, n_pages: int):
+    """Grid (BH, P): the page dimension is innermost, so each step copies
+    one gathered page (the BlockSpec index map did the page-table lookup)
+    into the VMEM scratch slab; the last page step runs the exact slab
+    decode body on the assembled (S_view, ·) scratch — bitwise equal to
+    gathering on the host and calling the slab kernel."""
+    del ptc_ref  # consumed by the BlockSpec index maps
+    p = pl.program_id(1)
+    k_scr[pl.ds(p * ps, ps), :] = k_ref[0, :, 0, :].astype(jnp.float32)
+    v_scr[pl.ds(p * ps, ps), :] = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        o_ref[0] = _mx_attn_decode_body(
+            q_ref[0].astype(jnp.float32), k_scr[...], v_scr[...],
+            msk_ref[0] != 0, fmt=fmt, block=block, scale=scale,
+            out_dtype=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "interpret"))
+def mx_attn_decode_paged_pallas(q: jax.Array, k_pool: jax.Array,
+                                v_pool: jax.Array, page_table: jax.Array,
+                                valid: jax.Array,
+                                fmt: Optional[ElementFormat],
+                                block: int = MX_BLOCK,
+                                interpret: bool = False) -> jax.Array:
+    """Paged decode: q (BH, G, d) with BH = B * H against page pools
+    k_pool/v_pool (N, ps, H, ·) through a (B, P) page table.
+
+    The page table rides in as a scalar-prefetch operand, so the k/v
+    BlockSpec index maps resolve physical pages *before* the DMA — the
+    kernel itself never indexes HBM.  valid: (B, P*ps) bool per view
+    position (unallocated pages are clamped to page 0 by the gather and
+    masked here, exactly like the ref oracle)."""
+    BH, G, d = q.shape
+    B, P = page_table.shape
+    H = BH // B
+    N, ps, _, dk = k_pool.shape
+    dv_ = v_pool.shape[-1]
+    S_view = P * ps
+    scale = 1.0 / math.sqrt(d)
+    ptc = jnp.clip(page_table, 0, N - 1).astype(jnp.int32)
+    msk = jnp.repeat(valid, H, axis=0).astype(jnp.int32)[:, None, :]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BH, P),
+        in_specs=[
+            pl.BlockSpec((1, G, d), lambda bh, p, pt: (bh, 0, 0)),
+            pl.BlockSpec((1, ps, 1, dk),
+                         lambda bh, p, pt: (pt[bh // H, p], 0, bh % H, 0)),
+            pl.BlockSpec((1, ps, 1, dv_),
+                         lambda bh, p, pt: (pt[bh // H, p], 0, bh % H, 0)),
+            pl.BlockSpec((1, 1, S_view), lambda bh, p, pt: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, dv_), lambda bh, p, pt: (bh, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((S_view, dk), jnp.float32),
+                        pltpu.VMEM((S_view, dv_), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_mx_attn_decode_paged_kernel, fmt=fmt, block=block,
+                          scale=scale, ps=ps, n_pages=P),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, G, dv_), q.dtype),
+        interpret=interpret,
+    )(ptc, q, k_pool, v_pool, msk)
 
 
 @functools.partial(jax.jit, static_argnames=("fmt", "block", "interpret"))

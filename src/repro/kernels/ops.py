@@ -18,6 +18,7 @@ from repro.core.formats import ElementFormat
 from repro.core.mx import MX_BLOCK
 from . import ref
 from .mx_attention import (attn_tiles, mx_attn_bwd_pallas,
+                           mx_attn_decode_paged_pallas,
                            mx_attn_decode_pallas, mx_attn_fwd_pallas)
 from .mx_matmul import mx_matmul_pallas
 from .mx_matmul_bwd import mx_matmul_dgrad_pallas, mx_matmul_wgrad_pallas
@@ -25,7 +26,7 @@ from .mx_quant import mx_quantize_pallas
 
 __all__ = ["mx_quantize", "mx_matmul", "mx_matmul_dgrad", "mx_matmul_wgrad",
            "mx_flash_attention", "mx_flash_attention_bwd",
-           "mx_attention_decode"]
+           "mx_attention_decode", "mx_attention_decode_paged"]
 
 
 def _use_interpret() -> bool:
@@ -142,6 +143,32 @@ def mx_attention_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                                            scale_mode=scale_mode)
     return mx_attn_decode_pallas(q, k, v, valid, fmt, block=block,
                                  interpret=_use_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "scale_mode"))
+def mx_attention_decode_paged(q: jax.Array, k_pool: jax.Array,
+                              v_pool: jax.Array, page_table: jax.Array,
+                              valid: jax.Array,
+                              fmt: Optional[ElementFormat],
+                              block: int = MX_BLOCK,
+                              scale_mode: str = "floor") -> jax.Array:
+    """Kernel-backed paged decode: q (BH,G,d) against (N,ps,H,·) page pools
+    through a (B,P) page table with a (B, P*ps) per-view validity mask.
+
+    The Pallas path scalar-prefetches the page table so the gather happens
+    in the BlockSpec index maps; ineligible shapes (page size or head dim
+    not MX-block multiples, non-floor scales) fall back to the gather+slab
+    jnp oracle — same numerics either way."""
+    d = q.shape[-1]
+    ps = k_pool.shape[1]
+    S_view = page_table.shape[1] * ps
+    if ps % block or not _attn_kernel_ok(fmt, scale_mode, d, S_view, block):
+        return ref.mx_attention_decode_paged_ref(
+            q, k_pool, v_pool, page_table, valid, fmt, block=block,
+            scale_mode=scale_mode)
+    return mx_attn_decode_paged_pallas(q, k_pool, v_pool, page_table, valid,
+                                       fmt, block=block,
+                                       interpret=_use_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("fmt_a", "fmt_g", "block"))

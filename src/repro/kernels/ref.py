@@ -27,6 +27,7 @@ from repro.core.mx import MX_BLOCK, quantize_mx
 __all__ = ["mx_quantize_ref", "mx_matmul_ref", "mx_matmul_dgrad_ref",
            "mx_matmul_wgrad_ref", "mx_flash_attention_ref",
            "mx_flash_attention_bwd_ref", "mx_attention_decode_ref",
+           "mx_attention_decode_paged_ref", "gather_pages",
            "attn_tile_mask", "attn_tile_needed", "NEG_INF"]
 
 NEG_INF = -1e30
@@ -364,3 +365,42 @@ def mx_attention_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     out = jnp.einsum("bgs,bsd->bgd", prq, vv,
                      preferred_element_type=jnp.float32)
     return out.astype(q.dtype)
+
+
+def gather_pages(pool: jax.Array, page_table: jax.Array,
+                 n_kv: int) -> jax.Array:
+    """Assemble the folded (B*H, P*ps, d) contiguous view of a page pool.
+
+    pool: (N, ps, H, d) global page pool (H = n_kv heads); page_table:
+    (B, P) int32, negatives = unallocated (the gather clamps them to page
+    0 — callers mask those view positions out via ``valid``).  Logical
+    position ``t`` of request ``b`` lives at view position ``t`` exactly:
+    page ``t // ps``, offset ``t % ps``."""
+    B, P = page_table.shape
+    N, ps, H, d = pool.shape
+    ptc = jnp.clip(page_table, 0, N - 1)
+    g = pool[ptc]                                  # (B, P, ps, H, d)
+    return g.transpose(0, 3, 1, 2, 4).reshape(B * H, P * ps, d)
+
+
+def mx_attention_decode_paged_ref(q: jax.Array, k_pool: jax.Array,
+                                  v_pool: jax.Array, page_table: jax.Array,
+                                  valid: jax.Array,
+                                  fmt: Optional[ElementFormat],
+                                  block: int = MX_BLOCK,
+                                  scale_mode: str = "floor") -> jax.Array:
+    """Paged decode oracle: gather pages into the contiguous slab view and
+    run the slab decode oracle on it — the paging transform is *only* a
+    gather, so paged output is bitwise equal to slab output whenever the
+    gathered view holds the same values.
+
+    q: (BH, G, d) with BH = B * n_kv; k_pool/v_pool: (N, ps, H, dk/dv);
+    page_table: (B, P) int32; valid: (B, P*ps) bool per *view* position
+    (allocated page AND logical position <= pos)."""
+    B = page_table.shape[0]
+    H = q.shape[0] // B
+    kv = gather_pages(k_pool, page_table, H)
+    vv = gather_pages(v_pool, page_table, H)
+    validr = jnp.repeat(valid, H, axis=0)
+    return mx_attention_decode_ref(q, kv, vv, validr, fmt, block=block,
+                                   scale_mode=scale_mode)

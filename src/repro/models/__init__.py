@@ -1,12 +1,15 @@
 """Model zoo: MX-quantized transformer/hybrid/SSM stacks + proxy MLP."""
-from .transformer import (LMConfig, block_plan, init_cache, lm_apply,
+from .transformer import (LMConfig, block_plan, chunk_supported, init_cache,
+                          init_cache_paged, kind_paged, lm_apply,
                           lm_decode_step, lm_init, lm_loss, lm_prefill,
+                          lm_prefill_chunk, paged_leaf_mask,
                           prefill_supported)
 from .proxy import (ProxyConfig, proxy_apply, proxy_batch, proxy_init,
                     proxy_loss, teacher_init)
 
-__all__ = ["LMConfig", "block_plan", "init_cache", "lm_apply",
+__all__ = ["LMConfig", "block_plan", "chunk_supported", "init_cache",
+           "init_cache_paged", "kind_paged", "lm_apply",
            "lm_decode_step", "lm_init", "lm_loss", "lm_prefill",
-           "prefill_supported",
+           "lm_prefill_chunk", "paged_leaf_mask", "prefill_supported",
            "ProxyConfig", "proxy_apply", "proxy_batch", "proxy_init",
            "proxy_loss", "teacher_init"]

@@ -31,8 +31,10 @@ import jax.numpy as jnp
 
 from repro.core import AttnSpec, QuantConfig, mx_contract, quantize_mx
 
-__all__ = ["attn_init", "attention", "attention_decode", "attention_prefill",
-           "flash_attention", "local_attention"]
+__all__ = ["attn_init", "attention", "attention_decode",
+           "attention_decode_paged", "attention_prefill",
+           "attention_prefill_chunk", "flash_attention", "local_attention",
+           "paged_valid_mask"]
 
 NEG_INF = -1e30
 
@@ -206,6 +208,94 @@ def attention_decode(p, x, cache, *, qcfg: QuantConfig, n_heads: int,
     from .layers import qdense
     out = qdense(p["wo"], o, qcfg)
     return out, {"k": k, "v": v}
+
+
+def paged_valid_mask(page_table: jax.Array, pos: jax.Array,
+                     page_size: int) -> jax.Array:
+    """(B, P*ps) per-view-position validity for paged decode: the position's
+    page must be allocated AND the logical position must be <= pos (view
+    position == logical position by construction).  Unallocated (-1) pages
+    are clamped to page 0 by the gather and masked out here — including
+    every position of a dead (freed) row, whose table is all -1."""
+    B, P = page_table.shape
+    vp = jnp.arange(P * page_size)
+    allocated = (page_table >= 0)[:, vp // page_size]      # (B, P*ps)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    return allocated & (vp[None, :] <= pos[:, None])
+
+
+def attention_decode_paged(p, x, cache, *, qcfg: QuantConfig, n_heads: int,
+                           n_kv: int, d_head: int, pos: jax.Array,
+                           page_table: jax.Array, spec: AttnSpec,
+                           rope_theta: float = 1e4, use_rope: bool = True):
+    """One-token decode against (k, v) page pools.
+
+    x: (B, 1, D); cache: {"k": (N, ps, Hkv, d), "v": ...} — global pools
+    shared by every row through the (B, P) ``page_table`` (physical page of
+    logical page ``t // ps``; -1 = unallocated).  The new token scatters
+    into its row's current tail page; dead rows (all -1 tables) resolve to
+    an out-of-range sentinel and the write drops, so freed pages are never
+    touched.  Scoring runs through ``mx_contract(kind="attn_decode_paged")``
+    — a scalar-prefetch page-gather kernel on the fused path, the
+    gather+slab oracle otherwise (bitwise-identical numerics).
+    """
+    B = x.shape[0]
+    N, ps = cache["k"].shape[0], cache["k"].shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None]
+    q, k_new, v_new = _project_qkv(p, x, x, qcfg, n_heads, n_kv, d_head,
+                                   positions, None, rope_theta,
+                                   use_rope=use_rope)
+    rows = jnp.arange(B)
+    phys = page_table[rows, pos // ps]
+    # JAX scatter indices wrap when negative: dead rows must land out of
+    # range (dropped), never at page -1 == page N-1.
+    phys = jnp.where(phys < 0, N, phys)
+    off = pos % ps
+    k = cache["k"].at[phys, off].set(k_new[:, 0].astype(cache["k"].dtype),
+                                     mode="drop")
+    v = cache["v"].at[phys, off].set(v_new[:, 0].astype(cache["v"].dtype),
+                                     mode="drop")
+    G = n_heads // n_kv
+    qf = q[:, 0].reshape(B * n_kv, G, d_head)
+    valid = paged_valid_mask(page_table, pos, ps)
+    o = mx_contract(qf, (k, v), qcfg, kind="attn_decode_paged", valid=valid,
+                    pages=page_table)
+    o = o.reshape(B, 1, n_heads * d_head).astype(x.dtype)
+    from .layers import qdense
+    out = qdense(p["wo"], o, qcfg)
+    return out, {"k": k, "v": v}
+
+
+def attention_prefill_chunk(p, x, prior_k, prior_v, *, qcfg: QuantConfig,
+                            n_heads: int, n_kv: int, d_head: int, positions,
+                            spec: AttnSpec, kv_mask=None,
+                            rope_theta: float = 1e4, use_rope: bool = True):
+    """One chunk of a continuous (chunked) prefill.
+
+    x: (B, C, D) — the chunk's embeddings at absolute positions
+    ``spec.q_offset .. q_offset + C - 1``; prior_k/prior_v:
+    (B, q_offset, Hkv, d) — the already-written prefix K/V gathered from
+    the page pools.  Computes the rectangular causal flash attention of the
+    chunk's queries over prefix+chunk keys (PR 6's ``q_offset`` path) and
+    returns (out (B, C, D), k_chunk, v_chunk) for the caller to write into
+    fresh pages.  ``kv_mask`` ((B, C) bool) zeroes the K/V of padded tail
+    positions *before* attention so pad garbage can neither be attended
+    nor pollute at-rest MX block scales.
+    """
+    from .layers import qdense
+    B, C = x.shape[:2]
+    q, k, v = _project_qkv(p, x, x, qcfg, n_heads, n_kv, d_head, positions,
+                           None, rope_theta, use_rope=use_rope)
+    if kv_mask is not None:
+        m = kv_mask[:, :, None, None]
+        k = jnp.where(m, k, 0.0)
+        v = jnp.where(m, v, 0.0)
+    k_full = jnp.concatenate([prior_k.astype(k.dtype), k], axis=1)
+    v_full = jnp.concatenate([prior_v.astype(v.dtype), v], axis=1)
+    o = flash_attention(q, k_full, v_full, qcfg, spec)
+    out = qdense(p["wo"], o.reshape(B, C, n_heads * d_head), qcfg)
+    return out, k, v
 
 
 def attention_prefill(p, x, *, qcfg: QuantConfig, n_heads: int, n_kv: int,

@@ -16,9 +16,11 @@ import jax.numpy as jnp
 
 from repro.core import AttnSpec, QuantConfig, mx_contract, quantize_mx
 from .layers import dense_init, norm_init, apply_norm, qdense, rope
-from .attention import flash_attention, _maybe_quant, NEG_INF
+from .attention import (flash_attention, paged_valid_mask, _maybe_quant,
+                        NEG_INF)
 
-__all__ = ["mla_init", "mla_apply", "mla_decode", "mla_prefill"]
+__all__ = ["mla_init", "mla_apply", "mla_decode", "mla_decode_paged",
+           "mla_prefill"]
 
 
 def mla_init(key, d_model: int, n_heads: int, q_lora: int, kv_lora: int,
@@ -112,6 +114,20 @@ def mla_decode(p, x, cache, *, qcfg: QuantConfig, n_heads: int, nope: int,
         ckv_new[:, 0].astype(cache["ckv"].dtype))
     kr = cache["kr"].at[rows, pos].set(kr_new[:, 0].astype(cache["kr"].dtype))
 
+    out = _absorbed_attend(p, x, cq, ckv, kr, qcfg, n_heads, nope, rope_dim,
+                           v_head, pos, positions, rope_theta,
+                           jnp.arange(S)[None, :] <= pos[:, None])
+    return out, {"ckv": ckv, "kr": kr}
+
+
+def _absorbed_attend(p, x, cq, ckv, kr, qcfg, n_heads, nope, rope_dim,
+                     v_head, pos, positions, rope_theta, valid):
+    """Absorbed-form scoring + context over a contiguous (B, S, ·) latent
+    view with a precomputed (B, S) validity mask — shared verbatim by the
+    slab and paged decode paths so gathering pages cannot drift from the
+    slab numerics."""
+    B = x.shape[0]
+    kv_lora = ckv.shape[-1]
     q = qdense(p["w_uq"], cq, qcfg).reshape(B, n_heads, nope + rope_dim)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     q_rope = rope(q_rope[:, None], positions, rope_theta)[:, 0]
@@ -124,7 +140,6 @@ def mla_decode(p, x, cache, *, qcfg: QuantConfig, n_heads: int, nope: int,
                     ckv.astype(jnp.float32))
          + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
                       kr.astype(jnp.float32))) * scale
-    valid = jnp.arange(S)[None, :] <= pos[:, None]
     s = jnp.where(valid[:, None, :], s, NEG_INF)
     pr = jax.nn.softmax(s, axis=-1)
     # The latent-space context product is a standard P·V contraction:
@@ -134,4 +149,39 @@ def mla_decode(p, x, cache, *, qcfg: QuantConfig, n_heads: int, nope: int,
     w_uv = p["w_uv"]["w"].astype(x.dtype).reshape(kv_lora, n_heads, v_head)
     o = jnp.einsum("bhc,chv->bhv", ctx.astype(x.dtype), w_uv)
     o = o.reshape(B, 1, n_heads * v_head)
-    return qdense(p["wo"], o, qcfg), {"ckv": ckv, "kr": kr}
+    return qdense(p["wo"], o, qcfg)
+
+
+def mla_decode_paged(p, x, cache, *, qcfg: QuantConfig, n_heads: int,
+                     nope: int, rope_dim: int, v_head: int, pos,
+                     page_table, page_size: int, rope_theta: float = 1e4
+                     ) -> Tuple[jax.Array, dict]:
+    """Absorbed-form decode on paged latent pools.
+
+    cache: {"ckv": (N, ps, kv_lora), "kr": (N, ps, rope_dim)} — global page
+    pools addressed through the (B, P) ``page_table``.  Latents stay bf16
+    at rest (the paper quantizes GEMM operands, not state); the paging
+    transform is a pure scatter+gather, so decode is bitwise equal to the
+    slab path on the same logical contents.  Dead rows (all -1 tables)
+    scatter to an out-of-range sentinel and drop."""
+    B = x.shape[0]
+    N, ps = cache["ckv"].shape[0], cache["ckv"].shape[1]
+    P = page_table.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None]
+    cq, ckv_new, kr_new = _latents(p, x, qcfg, positions, rope_theta)
+    rows = jnp.arange(B)
+    phys = page_table[rows, pos // ps]
+    phys = jnp.where(phys < 0, N, phys)      # negatives wrap: drop instead
+    off = pos % ps
+    ckv_pool = cache["ckv"].at[phys, off].set(
+        ckv_new[:, 0].astype(cache["ckv"].dtype), mode="drop")
+    kr_pool = cache["kr"].at[phys, off].set(
+        kr_new[:, 0].astype(cache["kr"].dtype), mode="drop")
+    ptc = jnp.clip(page_table, 0, N - 1)
+    ckv = ckv_pool[ptc].reshape(B, P * ps, -1)
+    kr = kr_pool[ptc].reshape(B, P * ps, -1)
+    valid = paged_valid_mask(page_table, pos, ps)
+    out = _absorbed_attend(p, x, cq, ckv, kr, qcfg, n_heads, nope, rope_dim,
+                           v_head, pos, positions, rope_theta, valid)
+    return out, {"ckv": ckv_pool, "kr": kr_pool}

@@ -37,9 +37,10 @@ from repro.core import AttnSpec, QuantConfig, mx_contract
 from repro.parallel.sharding import shard_act
 from .layers import (COMPUTE_DTYPE, apply_norm, dense_init, embed_init,
                      embed_lookup, norm_init, qdense)
-from .attention import (attention, attention_decode, attention_prefill,
-                        attn_init)
-from .mla import mla_apply, mla_decode, mla_init, mla_prefill
+from .attention import (attention, attention_decode, attention_decode_paged,
+                        attention_prefill, attention_prefill_chunk, attn_init)
+from .mla import (mla_apply, mla_decode, mla_decode_paged, mla_init,
+                  mla_prefill)
 from .mlp import mlp_apply, mlp_init
 from .moe import moe_apply, moe_init
 from .rglru import (rec_block_apply, rec_block_decode, rec_block_init,
@@ -48,7 +49,9 @@ from .xlstm import (mlstm_apply, mlstm_decode, mlstm_init, mlstm_prefill,
                     slstm_apply, slstm_decode, slstm_init, slstm_prefill)
 
 __all__ = ["LMConfig", "lm_init", "lm_apply", "lm_loss", "init_cache",
-           "lm_decode_step", "lm_prefill", "prefill_supported", "block_plan"]
+           "init_cache_paged", "paged_leaf_mask", "kind_paged",
+           "lm_decode_step", "lm_prefill", "lm_prefill_chunk",
+           "prefill_supported", "chunk_supported", "block_plan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,9 +117,14 @@ class LMConfig:
             spec = dataclasses.replace(spec, cache_len=cache_len)
         return spec
 
-    def decode_spec(self, kind: str = "attn", cache_len: int = 0) -> AttnSpec:
-        """One-token decode AttnSpec (ring buffer for windowed layers)."""
+    def decode_spec(self, kind: str = "attn", cache_len: int = 0,
+                    page_size: int = 0) -> AttnSpec:
+        """One-token decode AttnSpec (ring buffer for windowed layers;
+        ``page_size > 0`` selects the paged-cache kind for eligible
+        layers — windowed/ring layers keep their slab ring spec)."""
         window = self.window if (kind == "attn" and not self.mla) else 0
+        if page_size > 0 and kind_paged(kind, self):
+            return AttnSpec.decode(cache_len=cache_len, page_size=page_size)
         return AttnSpec.decode(window=window, cache_len=cache_len)
 
     def param_count(self, active_only: bool = False) -> int:
@@ -499,14 +507,97 @@ def init_cache(cfg: LMConfig, B: int, S: int):
     return caches
 
 
-def _block_decode(h, p, cache, kind, cfg, qcfg, pos, enc_out=None):
+# --------------------------------------------------------------------------
+# paged cache (serving)
+# --------------------------------------------------------------------------
+def kind_paged(kind: str, cfg: LMConfig) -> bool:
+    """Whether a block kind's decode state lives in page pools.  Global
+    attention (and MLA latents) page; ring-buffer windowed layers and
+    recurrent/xLSTM state keep the slab layout (their state is O(window) /
+    O(1) per row — nothing to page)."""
+    if kind not in ("attn", "dense_attn"):
+        return False
+    if cfg.mla:
+        return True
+    return not (cfg.window and kind == "attn")
+
+
+def _paged_cache_init(kind: str, cfg: LMConfig, n_pages: int,
+                      page_size: int):
+    """Page-pool leaves for one paged block: (N, ps, ...) global pools
+    shared across batch rows through the engine's page table."""
+    dt = COMPUTE_DTYPE
+    if cfg.mla:
+        return {"ckv": jnp.zeros((n_pages, page_size, cfg.kv_lora), dt),
+                "kr": jnp.zeros((n_pages, page_size, cfg.rope_dim), dt)}
+    shp = (n_pages, page_size, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+
+
+def init_cache_paged(cfg: LMConfig, B: int, S: int, n_pages: int,
+                     page_size: int):
+    """Paged decode cache: eligible attention layers get (N, ps, ·) page
+    pools (one pool per layer, one shared page table); every other kind
+    keeps its slab entry from ``_cache_init`` (the slab fallback).  ``S``
+    sizes the slab leaves (= the per-row logical capacity P*ps)."""
+    plan = _decoder_plan(cfg)
+    caches = []
+    for pattern, n_rep in plan:
+        g = {}
+        for j, kind in enumerate(pattern):
+            if kind_paged(kind, cfg):
+                one = _paged_cache_init(kind, cfg, n_pages, page_size)
+            else:
+                one = _cache_init(kind, cfg, B, S)
+            g[f"b{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_rep,) + a.shape), one)
+        caches.append(g)
+    return caches
+
+
+def paged_leaf_mask(cfg: LMConfig):
+    """Pytree (same structure as ``init_cache_paged``'s result) of bools:
+    True for page-pool leaves, False for slab leaves — what the engine's
+    page-zeroing / gather / scatter helpers map over."""
+    plan = _decoder_plan(cfg)
+    out = []
+    for pattern, n_rep in plan:
+        g = {}
+        for j, kind in enumerate(pattern):
+            paged = kind_paged(kind, cfg)
+            proto = (_paged_cache_init(kind, cfg, 1, 1) if paged
+                     else _cache_init(kind, cfg, 1, 1))
+            g[f"b{j}"] = jax.tree.map(lambda a, p=paged: p, proto)
+        out.append(g)
+    return out
+
+
+def _block_decode(h, p, cache, kind, cfg, qcfg, pos, enc_out=None,
+                  page_table=None, page_size: int = 0):
     if kind in ("attn", "dense_attn", "dec_attn"):
         hn = apply_norm(p["ln1"], h, qcfg, cfg.norm)
-        if cfg.mla:
+        paged = (page_table is not None and page_size > 0
+                 and kind_paged(kind, cfg))
+        if cfg.mla and paged:
+            a, new_cache = mla_decode_paged(
+                p["attn"], hn, cache, qcfg=qcfg, n_heads=cfg.n_heads,
+                nope=cfg.nope_dim, rope_dim=cfg.rope_dim, v_head=cfg.v_head,
+                pos=pos, page_table=page_table, page_size=page_size,
+                rope_theta=cfg.rope_theta)
+        elif cfg.mla:
             a, new_cache = mla_decode(p["attn"], hn, cache, qcfg=qcfg,
                                       n_heads=cfg.n_heads, nope=cfg.nope_dim,
                                       rope_dim=cfg.rope_dim, v_head=cfg.v_head,
                                       pos=pos, rope_theta=cfg.rope_theta)
+        elif paged:
+            S_view = page_table.shape[1] * page_size
+            a, new_cache = attention_decode_paged(
+                p["attn"], hn, cache, qcfg=qcfg, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, d_head=cfg.d_head, pos=pos,
+                page_table=page_table,
+                spec=cfg.decode_spec(kind, cache_len=S_view,
+                                     page_size=page_size),
+                rope_theta=cfg.rope_theta)
         else:
             a, new_cache = attention_decode(
                 p["attn"], hn, cache, qcfg=qcfg, n_heads=cfg.n_heads,
@@ -557,11 +648,16 @@ def _block_decode(h, p, cache, kind, cfg, qcfg, pos, enc_out=None):
 
 
 def lm_decode_step(params, cache, tok, pos, cfg: LMConfig,
-                   qcfg: QuantConfig, enc_out=None):
+                   qcfg: QuantConfig, enc_out=None, page_table=None,
+                   page_size: int = 0):
     """One decode step.  tok: (B, 1) int32; pos: scalar int32 (whole batch
     at the same position) or (B,) int32 per-row positions — the latter is
     what the continuous-batching scheduler uses, where each slot sits at
     its own sequence length.
+
+    With ``page_table`` ((B, P) int32) and ``page_size`` set, eligible
+    attention layers read/write (N, ps, ·) page pools (``init_cache_paged``)
+    instead of per-row slabs; slab-fallback leaves behave as before.
 
     Returns (logits (B, vocab), new_cache)."""
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (tok.shape[0],))
@@ -574,7 +670,9 @@ def lm_decode_step(params, cache, tok, pos, cfg: LMConfig,
             new_lc = {}
             for j, kind in enumerate(pattern):
                 h, nc = _block_decode(h, lp[f"b{j}"], lc[f"b{j}"], kind, cfg,
-                                      qcfg, pos, enc_out)
+                                      qcfg, pos, enc_out,
+                                      page_table=page_table,
+                                      page_size=page_size)
                 new_lc[f"b{j}"] = nc
             return h, new_lc
 
@@ -718,3 +816,78 @@ def lm_prefill(params, tokens, cfg: LMConfig, qcfg: QuantConfig,
     h_last = h[jnp.arange(B), logit_positions]          # (B, D)
     logits = _head_matmul(params, h_last, cfg, qcfg)
     return logits, caches
+
+
+# --------------------------------------------------------------------------
+# chunked prefill (serving)
+# --------------------------------------------------------------------------
+def chunk_supported(cfg: LMConfig) -> bool:
+    """Whether ``lm_prefill_chunk`` covers this config: a pure global-
+    attention decoder stack.  Windowed/ring, recurrent, MLA, and MoE
+    configs prefill whole (``lm_prefill``) and are pagified afterwards —
+    their prefix state is not an append-only K/V sequence (ring slots,
+    RNN state, latent re-expansion, batch-level routing)."""
+    return (prefill_supported(cfg) and not cfg.mla and cfg.window == 0
+            and cfg.n_experts == 0 and cfg.d_rnn == 0
+            and set(cfg.block_pattern) <= {"attn"})
+
+
+def lm_prefill_chunk(params, tokens, prior, start: int, cfg: LMConfig,
+                     qcfg: QuantConfig, logit_positions=None,
+                     kv_mask=None):
+    """One chunk of a continuous prefill: forward ``tokens`` (B, C) at
+    absolute positions ``start .. start+C-1`` attending the already-written
+    prefix through ``prior`` — a cache-shaped tree whose attention leaves
+    hold the gathered (n_rep, B, start, Hkv, d) prefix K/V (empty leading
+    chunks pass start=0 arrays).
+
+    Returns (logits (B, vocab) at ``logit_positions`` (default C-1),
+    chunk_kv) where chunk_kv mirrors the cache structure with the chunk's
+    (n_rep, B, C, Hkv, d) K/V for the caller to write into fresh pages.
+    ``kv_mask`` ((B, C) bool) zeroes padded tail K/V so a fixed chunk
+    shape can carry a shorter final chunk."""
+    if not chunk_supported(cfg):
+        raise NotImplementedError(
+            "chunked prefill covers pure global-attention decoder stacks; "
+            "other configs prefill whole and pagify")
+    B, C = tokens.shape
+    h = shard_act(embed_lookup(params["embed"], tokens))
+    positions = jnp.broadcast_to(jnp.arange(start, start + C)[None], (B, C))
+    plan = _decoder_plan(cfg)
+    chunk_caches = []
+    for (pattern, n_rep), gp, gc in zip(plan, params["blocks"], prior):
+        def body(h, xs, pattern=pattern):
+            lp, lc = xs
+            nc = {}
+            for j, kind in enumerate(pattern):
+                hn = apply_norm(lp[f"b{j}"]["ln1"], h, qcfg, cfg.norm)
+                spec = cfg.attn_spec(kind).with_offset(start)
+                a, ck, cv = attention_prefill_chunk(
+                    lp[f"b{j}"]["attn"], hn, lc[f"b{j}"]["k"],
+                    lc[f"b{j}"]["v"], qcfg=qcfg, n_heads=cfg.n_heads,
+                    n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+                    positions=positions, spec=spec, kv_mask=kv_mask,
+                    rope_theta=cfg.rope_theta)
+                h = h + a
+                hn2 = apply_norm(lp[f"b{j}"]["ln2"], h, qcfg, cfg.norm)
+                h = h + mlp_apply(lp[f"b{j}"]["mlp"], hn2, qcfg, cfg.act)
+                nc[f"b{j}"] = {"k": ck, "v": cv}
+            return h, nc
+
+        if cfg.scan_layers and n_rep > 1:
+            h, cc = jax.lax.scan(body, h, (gp, gc))
+        else:
+            cc_list = []
+            for r in range(n_rep):
+                lp = jax.tree.map(lambda a, r=r: a[r], gp)
+                lc = jax.tree.map(lambda a, r=r: a[r], gc)
+                h, c = body(h, (lp, lc))
+                cc_list.append(c)
+            cc = jax.tree.map(lambda *xs: jnp.stack(xs), *cc_list)
+        chunk_caches.append(cc)
+    h = apply_norm(params["final_ln"], h, qcfg, cfg.norm)
+    if logit_positions is None:
+        logit_positions = jnp.full((B,), C - 1, jnp.int32)
+    h_last = h[jnp.arange(B), logit_positions]          # (B, D)
+    logits = _head_matmul(params, h_last, cfg, qcfg)
+    return logits, chunk_caches

@@ -1,7 +1,9 @@
-"""MX serving: fused prefill, continuous batching, per-request sampling."""
+"""MX serving: fused/chunked prefill, paged KV cache, continuous batching."""
 from .scheduler import Request, SamplingParams, Scheduler, sample_tokens
-from .engine import ServeEngine
+from .pages import PageAllocator, prefix_chain
+from .engine import PagedServeEngine, ServeEngine
 from .decode import generate, prefill_into_cache
 
 __all__ = ["Request", "SamplingParams", "Scheduler", "sample_tokens",
+           "PageAllocator", "prefix_chain", "PagedServeEngine",
            "ServeEngine", "generate", "prefill_into_cache"]

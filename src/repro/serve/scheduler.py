@@ -79,9 +79,13 @@ def sample_tokens(logits, temperature, top_k, seeds, n_gen,
     masked = lf
     if any_top_k:
         k = jnp.where(top_k > 0, jnp.minimum(top_k, V), V)      # (B,)
-        srt = jnp.sort(lf, axis=-1)[:, ::-1]                    # descending
-        thresh = jnp.take_along_axis(srt, (k - 1)[:, None], axis=-1)
-        masked = jnp.where(lf >= thresh, lf, -jnp.inf)
+        # Rank every vocab entry (stable sort: ties broken toward the
+        # lower index) and keep exactly the k best — a >= threshold test
+        # would admit *every* logit tied with the k-th value, inflating
+        # the candidate set beyond k.
+        order = jnp.argsort(-lf, axis=-1, stable=True)           # (B, V)
+        ranks = jnp.argsort(order, axis=-1, stable=True)         # rank of v
+        masked = jnp.where(ranks < k[:, None], lf, -jnp.inf)
     scaled = masked / jnp.maximum(temperature, 1e-6)[:, None]
 
     def draw(seed, n, row):
@@ -186,6 +190,14 @@ class Scheduler:
             return False
         req.finish_t = time.perf_counter()
         self.slots[slot] = None
+        # Zero *all* per-slot state: a freed slot must not keep decoding
+        # stale tokens at a stale position (its masked writes still land in
+        # the clamped cache row every step until re-admission), and the
+        # paged allocator keys live-row detection on pos/cur_tok being zero.
+        self.pos[slot] = 0
+        self.cur_tok[slot] = 0
         self.temp[slot] = 0.0
         self.top_k[slot] = 0
+        self.seeds[slot] = 0
+        self.n_gen[slot] = 0
         return True

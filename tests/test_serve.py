@@ -264,6 +264,94 @@ def test_generate_wrapper_roundtrip():
     assert bool((out >= 0).all()) and bool((out < cfg.vocab).all())
 
 
+# ---------------------------------------------------------------------------
+# regression tests (PR 7 bugfixes)
+# ---------------------------------------------------------------------------
+def test_sample_tokens_top_k_keeps_exactly_k_under_ties():
+    """Regression: the old `logit >= kth value` mask admitted every logit
+    tied with the k-th best, inflating the candidate set beyond k.  With
+    4 tied maxima and k=2, only the 2 lowest-index ties may ever win
+    (stable sort breaks ties toward the lower index)."""
+    from repro.serve import sample_tokens
+    logits = jnp.asarray([[3.0, 3.0, 3.0, 3.0, 1.0, 0.0, -1.0, -2.0]])
+    drawn = set()
+    for seed in range(40):
+        tok = sample_tokens(logits, jnp.asarray([1.0]), jnp.asarray([2]),
+                            jnp.asarray([seed]), jnp.asarray([0]),
+                            True, True)
+        drawn.add(int(tok[0]))
+    assert drawn == {0, 1}
+    # k past the tie group: candidates are exactly the top 3 by rank.
+    drawn = set()
+    for seed in range(60):
+        tok = sample_tokens(logits, jnp.asarray([5.0]), jnp.asarray([3]),
+                            jnp.asarray([seed]), jnp.asarray([0]),
+                            True, True)
+        drawn.add(int(tok[0]))
+    assert drawn == {0, 1, 2}
+
+
+def test_scheduler_finish_zeroes_all_slot_state():
+    """Regression: `_maybe_finish` used to leave temp/top_k/seeds/n_gen
+    (and pos/cur_tok) behind, so a freed slot kept decoding stale tokens
+    at a stale position until re-admission — and the paged engine keys
+    live-row detection on this state being zero."""
+    from repro.serve.scheduler import Request, Scheduler
+    s = Scheduler(max_batch=2, max_len=32)
+    req = Request(rid=0, prompt=np.arange(1, 5, dtype=np.int32),
+                  sampling=SamplingParams(temperature=0.9, top_k=7,
+                                          max_new_tokens=2, seed=123))
+    assert not s.place(0, req, first_token=11, pos=4)
+    assert s.temp[0] > 0 and s.top_k[0] == 7 and s.seeds[0] == 123
+    finished = s.record_step(np.asarray([13, 0]))   # hits max_new_tokens
+    assert finished == [req] and req.finish_reason == "length"
+    for arr in (s.pos, s.cur_tok, s.temp, s.top_k, s.seeds, s.n_gen):
+        assert arr[0] == 0
+
+
+def test_admit_never_blocks_on_device_work(monkeypatch):
+    """Regression: `_admit` called `jax.block_until_ready` per admission,
+    serializing every prefill against the previous one's device work.  The
+    two-phase admit (dispatch all, then realize) must not host-sync at
+    all — first tokens are realized by the int() cast alone."""
+    cfg, params, _ = _setup("qwen2-7b")
+    calls = []
+    orig = jax.block_until_ready
+    monkeypatch.setattr(jax, "block_until_ready",
+                        lambda x: (calls.append(1), orig(x))[1])
+    eng = ServeEngine(params, cfg, preset("e4m3_bf16act"), max_batch=3,
+                      max_len=64)
+    for n in (5, 9, 13):
+        eng.submit(np.arange(1, n + 1, dtype=np.int32),
+                   SamplingParams(max_new_tokens=3))
+    done = eng.drain()
+    assert len(done) == 3 and not calls
+
+
+def test_submit_rejects_prompts_that_cannot_decode():
+    """Regression: a prompt of exactly max_len used to burn a full prefill
+    and then finish "cache_full" with its budget unspent.  submit() now
+    rejects upfront unless max_new_tokens == 1 (the one shape that fits:
+    prefill emits the first token, nothing more is decoded)."""
+    cfg, params, _ = _setup("qwen2-7b")
+    qcfg = preset("e4m3_bf16act")
+    eng = ServeEngine(params, cfg, qcfg, max_batch=1, max_len=16)
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(1, 18, dtype=np.int32))     # T = max_len + 1
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(1, 17, dtype=np.int32),
+                   SamplingParams(max_new_tokens=2))     # T = max_len
+    with pytest.raises(ValueError):
+        eng.submit(np.asarray([], dtype=np.int32))
+    eng.submit(np.arange(1, 17, dtype=np.int32),
+               SamplingParams(max_new_tokens=1))         # exact fit
+    eng.submit(np.arange(1, 16, dtype=np.int32),
+               SamplingParams(max_new_tokens=50))        # T = max_len - 1
+    exact, almost = eng.drain()
+    assert exact.finish_reason == "length" and len(exact.tokens) == 1
+    assert almost.finish_reason == "cache_full" and len(almost.tokens) == 2
+
+
 @pytest.mark.parametrize("prec", ("bf16", "mxfp8_e4m3"))
 @pytest.mark.parametrize("arch", ["qwen2-7b", "recurrentgemma-9b"])
 def test_decode_step_matches_prefill_last_token_fused(arch, prec):
