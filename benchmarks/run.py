@@ -16,8 +16,8 @@ from . import (fig1_llm_instability, fig2_lr_sweep, fig3_act_ln,
                fig4_grad_bias, fig5_codes_clamp, fig6_mitigations,
                fig7_interventions, fig9_depth_width, fig10_optim_init,
                guard_autopilot, kernel_microbench, roofline,
-               serve_throughput, sweep_throughput, table1_mitigated_loss,
-               table2_scaling_law, train_throughput)
+               runtime_unify, serve_throughput, sweep_throughput,
+               table1_mitigated_loss, table2_scaling_law, train_throughput)
 from .common import emit, Row
 
 BENCHES = {
@@ -27,6 +27,7 @@ BENCHES = {
     "train": train_throughput,
     "sweep": sweep_throughput,
     "guard": guard_autopilot,
+    "runtime": runtime_unify,
     "fig4": fig4_grad_bias,
     "fig2": fig2_lr_sweep,
     "fig3": fig3_act_ln,

@@ -1,0 +1,172 @@
+"""repro.runtime payoff benchmark: one staged-execution engine under
+train and serve.
+
+Two claims, measured on the same CPU-scale LM:
+
+  1. **Segment cache** — the Trainer's jitted step is a runtime
+     ``SegmentFn``: a mid-run precision switch opens a new segment
+     (one trace per *distinct* qcfg), and switching **back** to an
+     already-compiled qcfg re-enters the existing executable with zero
+     retraces.  The paper's Fig. 7 interventions are exactly such
+     switches, so their cost is one compile each, not one per segment.
+
+  2. **snapshot_to_serve** — live trainer params become a ServeEngine
+     with one on-device copy, skipping the npz checkpoint round-trip,
+     and the engine's greedy decode is *bit-identical* to an engine
+     restored from a checkpoint of the same step (and survives the
+     trainer's donated buffers being consumed by further training).
+
+``--smoke`` is the CI gate: (a) a scheduled escalate→de-escalate run
+must compile exactly one executable per distinct qcfg (revisiting the
+base scheme hits the jit cache); (b) snapshot-to-serve greedy tokens ==
+checkpoint-round-trip greedy tokens, before *and after* the trainer
+trains on (donation safety); (c) the unified runtime journal (run_start
+/ segment / guard_transition / snapshot_to_serve records) is written to
+``runtime_journal.jsonl`` (uploaded as a CI artifact) and survives a
+JSONL round trip.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import preset
+from repro.data.synthetic import lm_input_arrays
+from repro.models import lm_init, lm_loss
+from repro.runtime import Journal, snapshot_to_serve
+from repro.serve import SamplingParams, ServeEngine
+from repro.train import Trainer, TrainerConfig
+
+from .common import Row
+
+JOURNAL_PATH = "runtime_journal.jsonl"
+# scheduled guard: escalate to the ladder's first mitigation at step 4,
+# back to the base scheme at step 8 — two transitions, three segments,
+# but only TWO distinct qcfgs (the revisit must not retrace).
+SCHED = "sched:4=bf16_activations,8=0"
+
+
+def _build_trainer(ckpt_dir: str, steps: int = 30):
+    cfg = get_config("olmo-paper", "smoke")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    tcfg = TrainerConfig(total_steps=steps, ckpt_dir=ckpt_dir,
+                         ckpt_every=10 ** 9, peak_lr=1e-3,
+                         guard=SCHED, log_every=1,
+                         spike_factor=float("inf"), grad_factor=float("inf"))
+    return Trainer(
+        loss_fn=lambda p, b, q: lm_loss(p, b, cfg, q),
+        params=params, qcfg=preset("mxfp8_e4m3"),
+        batch_fn=lambda s: lm_input_arrays(s, cfg, 4, 32),
+        tcfg=tcfg), cfg
+
+
+def _greedy(engine, cfg, n_new: int = 6) -> np.ndarray:
+    prompt = np.arange(1, 9, dtype=np.int32) % cfg.vocab
+    rid = engine.submit(prompt, SamplingParams(temperature=0.0,
+                                               max_new_tokens=n_new))
+    # drain() returns every request finished over the engine's lifetime
+    done = {r.rid: r for r in engine.drain()}
+    return np.asarray(done[rid].tokens)
+
+
+def _ckpt_roundtrip_engine(trainer, ckpt_dir: str, cfg):
+    """The pre-runtime path: npz checkpoint → fresh Trainer → engine."""
+    trainer.checkpoint()
+    trainer._ckptr.wait()
+    t2, _ = _build_trainer(ckpt_dir)
+    assert t2.restore(), "checkpoint restore failed"
+    return ServeEngine(t2.params, cfg, t2.qcfg, max_batch=2, max_len=48), t2
+
+
+def run(budget: str) -> List[Row]:
+    rows: List[Row] = []
+    steps = 10 if budget == "quick" else 30
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tr, cfg = _build_trainer(ckpt_dir, steps=steps)
+        tr.run(steps)
+        sf = tr._step_fn
+        segments = len(tr.events.of_kind("segment"))
+        rows.append(Row("runtime.segment_cache",
+                        0.0, f"segments={segments + 1} "
+                        f"distinct_qcfgs={sf.n_keys} traces={sf.n_traces} "
+                        f"calls={sf.calls}"))
+
+        t0 = time.perf_counter()
+        eng = snapshot_to_serve(tr, cfg, max_batch=2, max_len=48)
+        snap_us = (time.perf_counter() - t0) * 1e6
+        toks_live = _greedy(eng, cfg)
+
+        t0 = time.perf_counter()
+        eng2, t2 = _ckpt_roundtrip_engine(tr, ckpt_dir, cfg)
+        ckpt_us = (time.perf_counter() - t0) * 1e6
+        toks_ckpt = _greedy(eng2, cfg)
+        match = bool(np.array_equal(toks_live, toks_ckpt))
+        rows.append(Row("runtime.snapshot_to_serve", snap_us,
+                        f"ckpt_roundtrip_us={ckpt_us:.0f} "
+                        f"speedup={ckpt_us / max(snap_us, 1e-9):.1f}x "
+                        f"bit_identical={int(match)}"))
+    return rows
+
+
+def smoke() -> int:
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tr, cfg = _build_trainer(ckpt_dir, steps=12)
+        qcfg0 = tr.qcfg
+        tr.run(12)
+        sf = tr._step_fn
+
+        # (a) segment cache: 2 scheduled transitions → 3 executed
+        # segments, 2 distinct qcfgs, and the step-8 return to the base
+        # scheme re-enters the step-0 executable: exactly 2 traces, and
+        # the base qcfg traced exactly once despite 2 segments using it.
+        seg_recs = tr.events.of_kind("segment")
+        ok_segs = [r["step"] for r in seg_recs] == [4, 8]
+        ok_traces = (sf.n_traces == 2 and sf.n_keys == 2
+                     and sf.traces_for(qcfg0) == 1
+                     and tr.qcfg == qcfg0)
+        print(f"runtime.smoke.segment_cache,{sf.n_traces},"
+              f"segments={[r['step'] for r in seg_recs]} "
+              f"keys={sf.n_keys} base_traces={sf.traces_for(qcfg0)} "
+              f"calls={sf.calls} "
+              f"{'OK' if (ok_segs and ok_traces) else 'FAIL'}")
+
+        # (b) snapshot-to-serve vs checkpoint round-trip, bit-identical
+        eng = snapshot_to_serve(tr, cfg, max_batch=2, max_len=48)
+        toks_live = _greedy(eng, cfg)
+        eng2, _ = _ckpt_roundtrip_engine(tr, ckpt_dir, cfg)
+        toks_ckpt = _greedy(eng2, cfg)
+        ok_bits = bool(np.array_equal(toks_live, toks_ckpt))
+        # donation safety: train on (the step donates params/opt buffers);
+        # the snapshot engine's weights must be unaffected copies.
+        tr.run(3)
+        toks_after = _greedy(eng, cfg)
+        ok_donate = bool(np.array_equal(toks_after, toks_live))
+        print(f"runtime.smoke.snapshot_to_serve,{len(toks_live)},"
+              f"bit_identical={int(ok_bits)} "
+              f"survives_donation={int(ok_donate)} "
+              f"{'OK' if (ok_bits and ok_donate) else 'FAIL'}")
+
+        # (c) unified journal artifact + JSONL round trip
+        tr.events.to_jsonl(JOURNAL_PATH)
+        back = Journal.from_jsonl(JOURNAL_PATH)
+        kinds = sorted({r["event"] for r in back})
+        ok_journal = (back == list(tr.events)
+                      and {"run_start", "segment", "guard_transition",
+                           "snapshot_to_serve"} <= set(kinds))
+        print(f"runtime.smoke.journal,{len(back)},kinds={kinds} "
+              f"{'OK' if ok_journal else 'FAIL'}")
+        return 0 if (ok_segs and ok_traces and ok_bits and ok_donate
+                     and ok_journal) else 1
+
+
+if __name__ == "__main__":
+    import sys
+    if "--smoke" in sys.argv:
+        sys.exit(smoke())
+    from .common import emit
+    emit(run("full" if "--full" in sys.argv else "quick"))

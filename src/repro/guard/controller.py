@@ -26,6 +26,7 @@ import dataclasses
 from typing import Dict, List, Mapping, Optional
 
 from repro.core import QuantConfig, apply_intervention
+from repro.runtime.journal import Journal
 
 from .policy import Decision, GuardPolicy, PolicyState, decide, get_policy
 
@@ -38,7 +39,10 @@ class PrecisionController:
         self.base = base_qcfg
         self.policy: GuardPolicy = get_policy(policy)
         self.state = state or PolicyState()
-        self.journal: List[dict] = []
+        # the unified runtime Journal (a list subclass): replay/JSONL come
+        # for free and the records land in the same typed bus as the
+        # Trainer's and the engines' events
+        self.journal: List[dict] = Journal()
         # cumulative string-scheduled transitions can leave the ladder, so
         # the current qcfg is tracked explicitly (not derived per call)
         self._cur = self.qcfg_at_level(self.state.level)
@@ -134,7 +138,7 @@ class PrecisionController:
         qcfg and journal are restored."""
         self.state = PolicyState.from_dict(d["state"])
         self._cur = QuantConfig.from_dict(d["qcfg"])
-        self.journal = list(d.get("journal", ()))
+        self.journal = Journal(d.get("journal", ()))
 
 
 def advisory_journals(losses, gnorms, policy, base_qcfg,

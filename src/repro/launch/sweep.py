@@ -36,6 +36,10 @@ def _parse_args(argv=None):
                     help="execute at most N runs this launch")
     ap.add_argument("--by", default="label",
                     help="aggregate report key (label/scheme/lr/seed)")
+    ap.add_argument("--journal", default=None,
+                    help="write a unified runtime journal (one sweep_run "
+                         "record per executed run, guard journal inlined) "
+                         "to this JSONL path at exit (CI artifact)")
     ap.add_argument("--mesh", default=None,
                     help="data,model[,pod] device mesh, e.g. 4,1")
     ap.add_argument("--fake-devices", type=int, default=0,
@@ -86,6 +90,16 @@ def main(argv=None) -> int:
                                 if rep.interrupted else ""))
     done = [rep.results[rid] for rid in rep.order if rid in rep.results]
     print(format_table(aggregate(done, by=args.by)))
+    if args.journal:
+        from repro.runtime import Journal
+        journal = Journal()
+        for res in done:
+            journal.emit("sweep_run", run_id=res.run_id, label=res.label,
+                         scheme=res.scheme, steps=res.steps,
+                         divergent=res.divergent,
+                         diverge_step=res.diverge_step,
+                         guard_journal=list(res.guard_journal))
+        journal.to_jsonl(args.journal)
     if db is not None:
         db.close()
     return 0

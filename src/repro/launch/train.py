@@ -48,6 +48,10 @@ def _parse_args(argv=None):
     ap.add_argument("--guard-journal", default=None,
                     help="write the guard transition journal to this JSONL "
                          "path at exit (CI artifact)")
+    ap.add_argument("--journal", default=None,
+                    help="write the unified runtime journal (run_start / "
+                         "segment / guard / recovery records) to this "
+                         "JSONL path at exit (CI artifact)")
     ap.add_argument("--log-jsonl", default=None)
     ap.add_argument("--log-every", type=int, default=50,
                     help="host-sync/log window (steps); metrics stay "
@@ -132,9 +136,10 @@ def main(argv=None):
               f"{len(trainer._controller.journal)} transition(s), final "
               f"precision {trainer.qcfg.describe()}")
         if args.guard_journal:
-            with open(args.guard_journal, "w") as f:
-                for rec in trainer._controller.journal:
-                    f.write(json.dumps(rec) + "\n")
+            # the controller journal is a runtime Journal: JSONL for free
+            trainer._controller.journal.to_jsonl(args.guard_journal)
+    if args.journal:
+        trainer.events.to_jsonl(args.journal)
     if args.log_jsonl:
         with open(args.log_jsonl, "w") as f:
             for rec in hist:

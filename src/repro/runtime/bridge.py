@@ -1,0 +1,49 @@
+"""snapshot_to_serve: hand a mid-training model to the serving engine.
+
+The payoff of running train and serve on one staged-execution runtime:
+the Trainer's live (possibly sharded) parameters become a ServeEngine
+*on-device* — no checkpoint write, no host round-trip — so online eval
+can sample from the exact model state the run is at, mid-segment.
+
+Donation safety: the Trainer's jitted step donates its param/optimizer
+buffers, so the engine must NOT alias them — the next ``trainer.run()``
+would invalidate the engine's weights in place.  The snapshot therefore
+deep-copies every param leaf (``jnp.copy``); for CPU-scale models this is
+one device-side memcpy, still far cheaper than the npz round-trip, and
+the copy is what makes the engine's outputs bit-identical to a
+checkpoint-save/restore of the same step (the CI smoke asserts this).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+__all__ = ["snapshot_to_serve"]
+
+
+def snapshot_to_serve(trainer, cfg, *, paged: bool = False,
+                      max_batch: int = 4, max_len: int = 256,
+                      eos_id: Optional[int] = None, **engine_kwargs) -> Any:
+    """Build a ServeEngine (or PagedServeEngine, ``paged=True``) around a
+    deep copy of ``trainer.params`` under the trainer's *current* qcfg.
+
+    ``cfg`` is the LMConfig the trainer's loss closes over (the Trainer
+    never needs it itself, so it cannot be inferred).  Extra keyword
+    arguments pass through to the engine constructor (``n_pages``,
+    ``page_size``, ``prefill``, ...).  Emits a ``snapshot_to_serve``
+    record on the trainer's journal.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serve import PagedServeEngine, ServeEngine
+
+    params = jax.tree.map(jnp.copy, trainer.params)
+    kind = PagedServeEngine if paged else ServeEngine
+    engine = kind(params, cfg, trainer.qcfg, max_batch=max_batch,
+                  max_len=max_len, eos_id=eos_id, **engine_kwargs)
+    trainer.events.append({
+        "event": "snapshot_to_serve", "step": int(trainer.step),
+        "qcfg": trainer.qcfg.describe(), "paged": bool(paged),
+        "segment_index": getattr(getattr(trainer, "_segments", None),
+                                 "index", 0)})
+    return engine

@@ -1,0 +1,101 @@
+"""Unified device-memory accounting for train, sweep, and serve.
+
+One :class:`MemoryLedger` per engine: the Trainer accounts its param /
+optimizer trees, the serve engines their weights, KV slabs, and page
+pools.  Each named entry holds a byte count (measured off the live arrays
+by :func:`tree_bytes`); an optional ``budget_bytes`` turns the ledger into
+a guard — accounting past the budget raises :class:`MemoryBudgetError`
+*before* the allocation-side OOM would, with a report of which ledger
+entries own the memory.  Every account/release can mirror a ``memory``
+record onto the engine's journal so the budget story is replayable like
+everything else.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+__all__ = ["tree_bytes", "MemoryLedger", "MemoryBudgetError"]
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of the array leaves of a pytree (device or host)."""
+    import jax
+    import numpy as np
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        nb = getattr(leaf, "nbytes", None)
+        if nb is None:
+            nb = np.asarray(leaf).nbytes
+        total += int(nb)
+    return total
+
+
+class MemoryBudgetError(RuntimeError):
+    """An accounted allocation would exceed the ledger's budget."""
+
+
+class MemoryLedger:
+    """Named byte ledgers with an optional budget guard.
+
+    ``account(name, tree)`` (re)binds an entry to the tree's measured
+    size; ``release(name)`` drops it.  With ``journal`` set, each change
+    emits a ``memory`` record (ledger name, entry, bytes, running total).
+    """
+
+    def __init__(self, budget_bytes: Optional[int] = None, *,
+                 journal=None, name: str = "device"):
+        self.name = name
+        self.budget_bytes = budget_bytes
+        self.journal = journal
+        self._entries: Dict[str, int] = {}
+
+    # ---- accounting --------------------------------------------------------
+    def account(self, key: str, tree: Any = None, *,
+                nbytes: Optional[int] = None) -> int:
+        """Bind entry ``key`` to ``tree``'s byte size (or an explicit
+        ``nbytes``).  Rebinding replaces the previous size.  Raises
+        :class:`MemoryBudgetError` if the new total exceeds the budget
+        (the entry is still recorded, so the error report names it)."""
+        if nbytes is None:
+            nbytes = tree_bytes(tree)
+        self._entries[key] = int(nbytes)
+        self._emit("account", key, int(nbytes))
+        if self.budget_bytes is not None and self.total > self.budget_bytes:
+            raise MemoryBudgetError(
+                f"ledger {self.name!r}: accounting {key!r} "
+                f"({int(nbytes)} B) exceeds budget {self.budget_bytes} B "
+                f"(total {self.total} B): {self.report()}")
+        return int(nbytes)
+
+    def release(self, key: str) -> int:
+        nb = self._entries.pop(key, 0)
+        if nb:
+            self._emit("release", key, nb)
+        return nb
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    def __getitem__(self, key: str) -> int:
+        return self._entries[key]
+
+    @property
+    def total(self) -> int:
+        return sum(self._entries.values())
+
+    @property
+    def headroom(self) -> Optional[int]:
+        if self.budget_bytes is None:
+            return None
+        return self.budget_bytes - self.total
+
+    def report(self) -> Dict[str, int]:
+        out = dict(sorted(self._entries.items()))
+        out["total"] = self.total
+        return out
+
+    def _emit(self, op: str, key: str, nbytes: int) -> None:
+        if self.journal is not None:
+            self.journal.append({
+                "event": "memory", "ledger": self.name, "op": op,
+                "entry": key, "bytes": int(nbytes), "total": self.total})

@@ -6,10 +6,13 @@ list mirrors ``Trainer.events`` (submit / prefill / request_done records
 with latency and throughput fields; ``stats()`` aggregates them).
 
 Compilation discipline — the former ``decode.py`` stub rebuilt ``jax.jit``
-closures on every call; here every jitted function lives at module level
-with the (frozen, hashable) ``LMConfig``/``QuantConfig`` as static
-arguments, so the trace cache is keyed on ``(cfg, qcfg)`` + shapes and is
-shared by every engine, wrapper, benchmark, and test in the process:
+closures on every call; here every jitted function is a module-level
+``repro.runtime.SegmentFn`` with the (frozen, hashable)
+``LMConfig``/``QuantConfig`` as static arguments, so the trace cache is
+keyed on ``(cfg, qcfg)`` + shapes, is shared by every engine, wrapper,
+benchmark, and test in the process, and every retrace is accounted (a
+revisited ``(cfg, qcfg)`` — e.g. a qcfg bucket switch — must hit the
+cache, which benchmarks/runtime_unify.py asserts in CI):
 
   * ``_serve_step``   — fixed (max_batch, 1) decode + per-slot sampling;
     admission swaps one cache row (``_insert_row``) and never recompiles.
@@ -43,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import QuantConfig
+from repro.runtime import Journal, MemoryLedger, SegmentFn
 from repro.models import (LMConfig, block_plan, chunk_supported, init_cache,
                           init_cache_paged, lm_decode_step, lm_prefill,
                           lm_prefill_chunk, paged_leaf_mask,
@@ -54,12 +58,12 @@ from .scheduler import Request, SamplingParams, Scheduler, sample_tokens
 __all__ = ["ServeEngine", "PagedServeEngine"]
 
 
-@partial(jax.jit, static_argnums=(4, 5))
+@partial(SegmentFn, static_argnums=(4, 5))
 def _decode_step(params, cache, tok, pos, cfg: LMConfig, qcfg: QuantConfig):
     return lm_decode_step(params, cache, tok, pos, cfg, qcfg)
 
 
-@partial(jax.jit, static_argnums=(2, 3, 4))
+@partial(SegmentFn, static_argnums=(2, 3, 4))
 def _prefill(params, tokens, cfg: LMConfig, qcfg: QuantConfig, max_len: int,
              logit_positions):
     return lm_prefill(params, tokens, cfg, qcfg, max_len, logit_positions)
@@ -69,7 +73,7 @@ def _prefill(params, tokens, cfg: LMConfig, qcfg: QuantConfig, max_len: int,
 # AttnSpec q_offset, both of which shape the rectangular flash grid.  Chunk
 # starts are multiples of the page size, so the trace count is bounded by
 # max_len / page_size, not by prompt diversity.
-@partial(jax.jit, static_argnums=(3, 4, 5))
+@partial(SegmentFn, static_argnums=(3, 4, 5))
 def _prefill_chunk(params, tokens, prior, start: int, cfg: LMConfig,
                    qcfg: QuantConfig, logit_positions, kv_mask):
     return lm_prefill_chunk(params, tokens, prior, start, cfg, qcfg,
@@ -80,7 +84,7 @@ def _prefill_chunk(params, tokens, prior, start: int, cfg: LMConfig,
 # cache buffers are donated: XLA updates the KV/state arrays in place
 # instead of copying the full (max_batch, max_len) cache per token (and
 # per admission).  Donation is a no-op (with a one-time notice) on CPU.
-@partial(jax.jit, static_argnums=(4, 5, 10, 11), donate_argnums=(1,))
+@partial(SegmentFn, static_argnums=(4, 5, 10, 11), donate_argnums=(1,))
 def _serve_step(params, cache, tok, pos, cfg: LMConfig, qcfg: QuantConfig,
                 temp, top_k, seeds, n_gen, any_sampled: bool,
                 any_top_k: bool):
@@ -93,7 +97,7 @@ def _serve_step(params, cache, tok, pos, cfg: LMConfig, qcfg: QuantConfig,
     return nxt, cache
 
 
-@partial(jax.jit, static_argnums=(5, 6, 7, 12, 13), donate_argnums=(1,))
+@partial(SegmentFn, static_argnums=(5, 6, 7, 12, 13), donate_argnums=(1,))
 def _serve_step_paged(params, cache, tok, pos, page_table, cfg: LMConfig,
                       qcfg: QuantConfig, page_size: int, temp, top_k, seeds,
                       n_gen, any_sampled: bool, any_top_k: bool):
@@ -108,7 +112,7 @@ def _serve_step_paged(params, cache, tok, pos, page_table, cfg: LMConfig,
     return nxt, cache
 
 
-@partial(jax.jit, donate_argnums=(0,))
+@partial(SegmentFn, donate_argnums=(0,))
 def _insert_row(full, one, slot):
     """Copy a single-request (B=1) cache into batch-cache row ``slot``."""
     return jax.tree.map(
@@ -116,7 +120,7 @@ def _insert_row(full, one, slot):
             f, o.astype(f.dtype), slot, axis=1), full, one)
 
 
-@partial(jax.jit, donate_argnums=(0,))
+@partial(SegmentFn, donate_argnums=(0,))
 def _insert_row_leaves(full_leaves, one_leaves, slot):
     """``_insert_row`` over an explicit leaf subset — the paged engine's
     slab-fallback leaves, whose tree is interleaved with page pools that
@@ -126,7 +130,8 @@ def _insert_row_leaves(full_leaves, one_leaves, slot):
         for f, o in zip(full_leaves, one_leaves))
 
 
-_sample_jit = jax.jit(sample_tokens, static_argnums=(5, 6))
+_sample_jit = SegmentFn(sample_tokens, static_argnums=(5, 6),
+                        name="serve_sample")
 
 
 def _bucket(n: int) -> int:
@@ -169,7 +174,13 @@ class ServeEngine:
                          and kinds <= {"attn", "dense_attn"})
         self.sched = Scheduler(max_batch, max_len, eos_id)
         self.cache = self._init_cache()
-        self.events: List[Dict[str, Any]] = []
+        # unified runtime journal + device-memory ledger (weights / KV
+        # state); cache rebinds every step at fixed shapes, so one
+        # accounting at init describes the whole run
+        self.events: Journal = Journal()
+        self.ledger = MemoryLedger(name="serve")
+        self.ledger.account("params", params)
+        self.ledger.account("cache", self.cache)
         self.finished: Dict[int, Request] = {}
         self._next_rid = 0
         self._decode_steps = 0
@@ -433,6 +444,14 @@ class PagedServeEngine(ServeEngine):
         self._rules = tuple(rules)
         self._rest_fmt = qcfg.a_fwd if qcfg.attn else None
         self._zero_pad = max(self.P, max_batch)
+        # split the base class's single cache entry into page pool vs slab
+        # fallback, so the ledger shows what the explicit page budget buys
+        leaves = self._leaves()
+        self.ledger.release("cache")
+        self.ledger.account("page_pool",
+                            [leaves[i] for i in self._paged_idx])
+        self.ledger.account("slab_fallback",
+                            [leaves[i] for i in self._slab_idx])
 
     def _init_cache(self):
         return init_cache_paged(self.cfg, self.sched.max_batch, self.max_len,

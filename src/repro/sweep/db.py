@@ -13,9 +13,10 @@ a run whose definition changed.
 """
 from __future__ import annotations
 
-import json
 import os
 from typing import Dict, Iterable, List, Optional
+
+from repro.runtime.journal import JsonlSink, read_jsonl
 
 from .spec import RunSpec
 
@@ -26,15 +27,12 @@ class RunDB:
     def __init__(self, path: str):
         self.path = path
         self._rows: Dict[str, dict] = {}
-        self._fh = None
+        # the runtime journal's sink: append + flush + fsync per row, the
+        # same durability contract as every other journal in the repo
+        self._sink = JsonlSink(path)
         if os.path.exists(path):
-            with open(path) as f:
-                for line in f:
-                    line = line.strip()
-                    if not line:
-                        continue
-                    row = json.loads(line)
-                    self._rows[row["run_id"]] = row
+            for row in read_jsonl(path):
+                self._rows[row["run_id"]] = row
 
     # ---- read -------------------------------------------------------------
     def __len__(self) -> int:
@@ -58,13 +56,7 @@ class RunDB:
     # ---- write ------------------------------------------------------------
     def append(self, run_id: str, spec: RunSpec, result: dict):
         row = {"run_id": run_id, "spec": spec.to_dict(), "result": result}
-        if self._fh is None:
-            os.makedirs(os.path.dirname(os.path.abspath(self.path)),
-                        exist_ok=True)
-            self._fh = open(self.path, "a")
-        self._fh.write(json.dumps(row) + "\n")
-        self._fh.flush()
-        os.fsync(self._fh.fileno())
+        self._sink.write(row)
         self._rows[run_id] = row
 
     def extend(self, items: Iterable):
@@ -72,9 +64,7 @@ class RunDB:
             self.append(run_id, spec, result)
 
     def close(self):
-        if self._fh is not None:
-            self._fh.close()
-            self._fh = None
+        self._sink.close()
 
     def __enter__(self):
         return self

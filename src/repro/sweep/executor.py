@@ -176,35 +176,15 @@ def _spike_flags(losses_2d: np.ndarray, r: RunSpec) -> np.ndarray:
 def _phase_segments(r: RunSpec, qcfg0):
     """[(start, end, qcfg)] step segments from the intervention schedule.
 
-    Merges ``r.phases`` with a *scheduled* guard policy (``r.guard``):
-    scheduled policies compile into the same phase-split scan — string
+    Thin wrapper over :func:`repro.runtime.plan_segments` (the shared
+    segment planner under the Trainer and the Fig. 7 benchmarks): merges
+    ``r.phases`` with a *scheduled* guard policy (``r.guard``) — string
     entries apply cumulatively like phases, integer entries jump to an
     absolute ladder level of the base scheme.  Online guard policies do
     not alter the segments (they run advisorily, see `_advisory_guard`).
     """
-    from repro.core import apply_intervention
-    switches = [(int(s), iv) for s, iv in r.phases]
-    ctl = None
-    if r.guard:
-        from repro.guard import PrecisionController, get_policy
-        pol = get_policy(r.guard)
-        if pol.is_scheduled:
-            ctl = PrecisionController(qcfg0, pol)
-            switches += [(int(s), w) for s, w in pol.schedule]
-    segs, qcfg, prev = [], qcfg0, 0
-    for step, what in sorted(switches, key=lambda x: (x[0],
-                                                      str(x[1]))):
-        step = int(np.clip(step, 0, r.steps))
-        if step > prev:
-            segs.append((prev, step, qcfg))
-            prev = step
-        if isinstance(what, str):
-            qcfg = apply_intervention(qcfg, what)
-        else:
-            qcfg = ctl.qcfg_at_level(what)
-    if prev < r.steps:
-        segs.append((prev, r.steps, qcfg))
-    return segs or [(0, r.steps, qcfg0)]
+    from repro.runtime import plan_segments
+    return plan_segments(r.steps, qcfg0, phases=r.phases, guard=r.guard)
 
 
 def _scheduled_journal(r: RunSpec) -> Optional[list]:
@@ -352,9 +332,14 @@ def _run_proxy_pack(runs: List[RunSpec], mesh=None,
         cat = lambda i: jnp.concatenate([o[i] for o in outs], axis=0)
         return carry[0], cat(0), cat(1), cat(2), cat(3)
 
+    from repro.runtime import SegmentFn
     t0 = time.perf_counter()
-    fparams, losses, gnorms, zetas, coss = jax.jit(run_all)(
-        students, opt0, teachers, lrs, dseeds)
+    # one SegmentFn per pack signature: the phase-split scan bakes its
+    # qcfg segments in by closure, so the whole pack is a single compiled
+    # segment chain (and lands in runtime.cache_stats() like every other
+    # staged program in the process)
+    fparams, losses, gnorms, zetas, coss = SegmentFn(
+        run_all, name="sweep_pack")(students, opt0, teachers, lrs, dseeds)
     losses, gnorms = (np.asarray(x, np.float64).T for x in (losses, gnorms))
     if track:
         zetas, coss = (np.asarray(x, np.float64).T for x in (zetas, coss))

@@ -111,8 +111,29 @@ class RunSpec:
 
     @property
     def run_id(self) -> str:
-        blob = json.dumps(self.to_dict(), sort_keys=True)
+        """Stable content hash keying the run DB.
+
+        Hashes only the fields that *differ from their defaults* (plus a
+        schema-version tag), so adding a new optional field to RunSpec —
+        as PR 5's ``guard``/``guard_probe_every`` did — no longer shifts
+        the id of every pre-existing spec and invalidates resume matching
+        on old DBs.  Migration: ids minted under the old recipe (every
+        field hashed) do not match these; re-launching a sweep against an
+        old DB re-executes its rows once — harmless, since RunDB loads
+        newest-row-wins — after which the DB carries stable ids.
+        """
+        d = self.to_dict()
+        sig = {k: v for k, v in d.items() if v != _RUNSPEC_DEFAULTS[k]}
+        blob = json.dumps({"schema": RUN_ID_SCHEMA, "spec": sig},
+                          sort_keys=True)
         return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+# Tag baked into every run_id: bump it if the hash *recipe* changes again,
+# so ids from different recipes can never collide by accident.
+RUN_ID_SCHEMA = 2
+_RUNSPEC_DEFAULTS = dataclasses.asdict(RunSpec())
+_RUNSPEC_DEFAULTS["phases"] = []
 
 
 def group_key(r: RunSpec) -> tuple:

@@ -57,7 +57,6 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional
 
@@ -69,6 +68,9 @@ from jax.sharding import PartitionSpec as P
 from repro.core import (QuantConfig, SpikeDetector, apply_intervention,
                         fused_gemms_enabled, get_format)
 from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from repro.runtime import (Journal, MemoryLedger, MetricsWindow, SegmentFn,
+                           SegmentTracker, checkpoint_meta,
+                           parse_checkpoint_meta)
 
 __all__ = ["TrainerConfig", "Trainer", "make_train_step"]
 
@@ -271,15 +273,17 @@ def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig,
             ((pl, ol, mrep(rep), bl, rep), (pl, ol, mrep(rep), rep)))
 
     if mesh is None:
-        return jax.jit(step_fn, static_argnums=static, donate_argnums=donate)
+        return SegmentFn(step_fn, static_argnums=static,
+                         donate_argnums=donate, name="train_step")
     like = lambda specs: jax.tree.map(
         lambda s: NamedSharding(mesh, s), specs,
         is_leaf=lambda x: isinstance(x, P))
     rep = NamedSharding(mesh, P())
     ins, outs = shapes(like(param_specs), like(opt_specs),
                        like(batch_specs), rep)
-    return jax.jit(step_fn, static_argnums=static, donate_argnums=donate,
-                   in_shardings=ins, out_shardings=outs)
+    return SegmentFn(step_fn, static_argnums=static, donate_argnums=donate,
+                     in_shardings=ins, out_shardings=outs,
+                     name="train_step")
 
 
 class Trainer:
@@ -335,7 +339,14 @@ class Trainer:
                                         mesh, self._pspecs, self._ospecs,
                                         self._bspecs, monitors=self._mcfg)
         self.history: List[Dict[str, float]] = []
-        self.events: List[Dict[str, Any]] = []
+        self.events: Journal = Journal()
+        # live segment numbering: every qcfg transition (guard, recovery,
+        # restore adoption) starts a new compiled segment; the index rides
+        # checkpoint meta so a resume continues the original numbering
+        self._segments = SegmentTracker(qcfg, journal=self.events)
+        self.ledger = MemoryLedger(name="trainer")
+        self.ledger.account("params", self.params)
+        self.ledger.account("opt", self.opt_state)
         self._ckptr = None
         if self.tcfg.ckpt_dir:
             from .checkpoint import Checkpointer
@@ -358,14 +369,15 @@ class Trainer:
 
     def checkpoint(self):
         if self._ckptr:
-            meta = {"step": self.step,
-                    "qcfg": self.qcfg.describe(),
-                    "qcfg_dict": self.qcfg.to_dict(),
-                    "recoveries": self._recoveries}
-            if self._controller is not None:
-                # autopilot state rides checkpoint meta so a resume picks
-                # up mid-flight (level, hysteresis counters, journal)
-                meta["guard"] = self._controller.state_dict()
+            # one serializer (runtime.journal.checkpoint_meta) builds the
+            # meta on the save side and parses it on the restore side, so
+            # the two can never drift apart field-by-field; autopilot state
+            # rides along so a resume picks up mid-flight (level,
+            # hysteresis counters, journal)
+            meta = checkpoint_meta(step=self.step, qcfg=self.qcfg,
+                                   recoveries=self._recoveries,
+                                   controller=self._controller,
+                                   segment_index=self._segments.index)
             self._ckptr.save(self.step, self._tree(), meta)
 
     def restore(self, step: Optional[int] = None,
@@ -392,25 +404,24 @@ class Trainer:
         self.params, self.opt_state = tree["params"], tree["opt"]
         self.step = s
         if adopt_meta and meta:
-            self._recoveries = int(meta.get("recoveries", self._recoveries))
-            saved = meta.get("qcfg_dict")
-            if saved is not None:
-                saved_qcfg = QuantConfig.from_dict(saved)
-                if saved_qcfg != self.qcfg:
-                    warnings.warn(
-                        f"checkpoint step {s} was written with qcfg "
-                        f"[{saved_qcfg.describe()}] but the trainer was "
-                        f"constructed with [{self.qcfg.describe()}]; "
-                        "adopting the checkpoint's qcfg (mid-run "
-                        "intervention preserved)")
-                    self.events.append({
-                        "step": s, "event": "qcfg_restored",
-                        "from_qcfg": self.qcfg.describe(),
-                        "to_qcfg": saved_qcfg.describe()})
-                    self.qcfg = saved_qcfg
+            rm = parse_checkpoint_meta(meta)
+            if rm.recoveries is not None:
+                self._recoveries = rm.recoveries
+            if rm.qcfg is not None and rm.qcfg != self.qcfg:
+                warnings.warn(
+                    f"checkpoint step {s} was written with qcfg "
+                    f"[{rm.qcfg.describe()}] but the trainer was "
+                    f"constructed with [{self.qcfg.describe()}]; "
+                    "adopting the checkpoint's qcfg (mid-run "
+                    "intervention preserved)")
+                self.events.append({
+                    "step": s, "event": "qcfg_restored",
+                    "from_qcfg": self.qcfg.describe(),
+                    "to_qcfg": rm.qcfg.describe()})
+                self.qcfg = rm.qcfg
             if self._controller is not None:
-                if meta.get("guard"):
-                    self._controller.load_state_dict(meta["guard"])
+                if rm.guard:
+                    self._controller.load_state_dict(rm.guard)
                     self.events.append({
                         "step": s, "event": "guard_restored",
                         "level": self._controller.level,
@@ -420,6 +431,9 @@ class Trainer:
                     # pre-guard checkpoint: adopt the restored scheme as
                     # the controller's baseline instead of desyncing
                     self._controller.rebase(self.qcfg)
+            # a restore re-enters the checkpointed segment (no journal
+            # record) rather than starting a new one
+            self._segments.restore(rm.segment_index, self.qcfg)
         return True
 
     # ---- recovery policy --------------------------------------------------
@@ -448,6 +462,9 @@ class Trainer:
             # monitor EMAs describe the poisoned trajectory — restart them
             from repro.guard import monitor_init
             self._mstate = monitor_init(self._mcfg)
+        # the segment boundary is journaled before the recovery record so
+        # the "recovery" event stays the window's terminal entry
+        self._segments.transition(self.step, self.qcfg, reason="recovery")
         self.events.append({
             "step": self.step, "event": "recovery", "reason": reason,
             "rolled_back": rolled, "from_qcfg": old,
@@ -473,6 +490,7 @@ class Trainer:
             if new is not None:
                 self.events.append(dict(self._controller.journal[-1]))
                 self.qcfg = new
+                self._segments.transition(self.step, new, reason="guard")
                 return True
         return False
 
@@ -527,14 +545,14 @@ class Trainer:
         end = self.step + (self.tcfg.total_steps if n_steps is None
                            else n_steps)
         log_every = max(self.tcfg.log_every, 1)
-        pending: List[tuple] = []
+        window = MetricsWindow()
         aborted = False
         with contextlib.ExitStack() as ctx:
             if self.mesh is not None:
                 from repro.parallel.sharding import activation_sharding
                 ctx.enter_context(self.mesh)
                 ctx.enter_context(activation_sharding(self.mesh))
-            win_t0 = time.monotonic()
+            window.reset_clock()
             while self.step < end:
                 batch = self.batch_fn(self.step)
                 if self._bshard is not None:
@@ -548,20 +566,18 @@ class Trainer:
                      metrics) = self._step_fn(
                         self.params, self.opt_state, self._mstate, batch,
                         jnp.asarray(self.step), self.qcfg)
-                pending.append((self.step, metrics))
+                window.push(self.step, metrics)
                 self.step += 1
                 at_ckpt = bool(self._ckptr) \
                     and self.step % self.tcfg.ckpt_every == 0
                 if not (at_ckpt or self.step >= end
                         or self.step % log_every == 0):
                     continue
-                # One host sync per window.  Steps chain through params, so
-                # the last metric being ready means the window finished;
-                # per-step time_s is the window wall time amortized (exact
-                # step latency when log_every == 1).
-                jax.block_until_ready(pending[-1][1]["loss"])
-                per = (time.monotonic() - win_t0) / len(pending)
-                pending = [(s, m, per) for s, m in pending]
+                # One host sync per window (MetricsWindow.drain): steps
+                # chain through params, so the last metric being ready
+                # means the window finished; per-step time_s is the window
+                # wall time amortized (exact when log_every == 1).
+                pending = window.drain()
                 self._guard_pass(pending)
                 recovered = False
                 while pending:
@@ -587,7 +603,9 @@ class Trainer:
                     # no rollback (forward-fix): the tail's updates remain
                     # applied, so keep draining it into history/watchdog
                 pending = []
-                win_t0 = time.monotonic()
+                # exclude recovery/checkpoint host work from the next
+                # window's amortized step time
+                window.reset_clock()
                 if aborted:
                     break
                 if at_ckpt and not recovered:

@@ -26,6 +26,19 @@ def test_sweep_engine_registered():
     assert callable(brun.BENCHES["sweep"].run)
 
 
+def test_runtime_benchmark_registered():
+    assert "runtime" in brun.BENCHES
+    assert callable(brun.BENCHES["runtime"].run)
+    assert callable(brun.BENCHES["runtime"].smoke)
+
+
+def test_unknown_name_error_lists_runtime(capsys):
+    # the registry error must stay exhaustive as benchmarks are added
+    rc = brun.main(["--only", "bogus", "--smoke"])
+    assert rc == 2
+    assert "runtime" in capsys.readouterr().err
+
+
 def test_smoke_covers_every_registered_benchmark(capsys):
     rc = brun.main(["--smoke"])
     assert rc == 0

@@ -169,19 +169,19 @@ def test_kernels_compiled_on_tpu_match_ref():
 # ---------------------------------------------------------------------------
 # Custom-VJP QLinear end-to-end through the fused kernels (interpret mode)
 # ---------------------------------------------------------------------------
-def test_qmatmul_vjp_plumbing_check_grads():
+def test_dense_contract_vjp_plumbing_check_grads():
     """With quantization off, the custom VJP must match numerical grads
     (jax.test_util.check_grads semantics) — validates the VJP wiring that
     the quantized paths share.  (An unquantized config never dispatches to
     the kernels; fused-path gradient coverage is
     test_qlinear_fused_step_matches_emulation below.)"""
     from jax.test_util import check_grads
-    from repro.core import qmatmul
+    from repro.core import mx_contract
     x = jnp.asarray(RNG.randn(8, 64).astype(np.float32))
     w = jnp.asarray(RNG.randn(64, 32).astype(np.float32) * 0.1)
     cfg = QuantConfig.bf16()
-    check_grads(lambda a, b: qmatmul(a, b, cfg), (x, w), order=1,
-                modes=["rev"], rtol=2e-3)
+    check_grads(lambda a, b: mx_contract(a, b, cfg, kind="dense"), (x, w),
+                order=1, modes=["rev"], rtol=2e-3)
 
 
 @pytest.mark.parametrize("preset_name", ["mxfp8_e4m3", "mx_mix"])

@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (E4M3, E5M2, QuantConfig, preset, qmatmul,
-                        quantize_mx, zeta_bound)
+from repro.core import (E4M3, E5M2, QuantConfig, mx_contract, preset,
+                        qmatmul, quantize_mx, zeta_bound)
 
 K = jax.random.PRNGKey(0)
 
@@ -14,7 +14,7 @@ def test_forward_equals_manual_quantization():
     cfg = preset("mxfp8_e4m3")
     x = jax.random.normal(K, (8, 64))
     w = jax.random.normal(jax.random.PRNGKey(1), (64, 32)) * 0.1
-    y = qmatmul(x, w, cfg)
+    y = mx_contract(x, w, cfg, kind="dense")
     xq = quantize_mx(x, E4M3, axis=-1)
     wq = quantize_mx(w, E4M3, axis=0)
     np.testing.assert_allclose(np.asarray(y), np.asarray(xq @ wq),
@@ -30,7 +30,7 @@ def test_fwd_only_grads_are_straight_through():
     dy = jax.random.normal(jax.random.PRNGKey(2), (8, 32))
 
     def f(x, w):
-        return jnp.sum(qmatmul(x, w, cfg) * dy)
+        return jnp.sum(mx_contract(x, w, cfg, kind="dense") * dy)
 
     gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
     np.testing.assert_allclose(np.asarray(gx), np.asarray(dy @ w.T),
@@ -46,7 +46,8 @@ def test_full_quant_grads_are_biased_but_close():
     dy = jax.random.normal(jax.random.PRNGKey(2), (64, 32))
 
     def f(c):
-        return lambda x, w: jnp.sum(qmatmul(x, w, c) * dy)
+        return lambda x, w: jnp.sum(
+            mx_contract(x, w, c, kind="dense") * dy)
 
     g_exact = jax.grad(f(QuantConfig.bf16()), argnums=(0, 1))(x, w)
     g_quant = jax.grad(f(cfg), argnums=(0, 1))(x, w)
@@ -65,7 +66,7 @@ def test_bwd_formats_differ_from_fwd():
     dy = jax.random.normal(jax.random.PRNGKey(3), (4, 32))
 
     def f(x):
-        return jnp.sum(qmatmul(x, w, cfg) * dy)
+        return jnp.sum(mx_contract(x, w, cfg, kind="dense") * dy)
 
     gx = jax.grad(f)(x)
     dyq = quantize_mx(dy, E5M2, axis=-1)
@@ -82,7 +83,7 @@ def test_wgrad_blocks_along_token_axis():
     dy = jax.random.normal(jax.random.PRNGKey(2), (64, 16))
 
     def f(w):
-        return jnp.sum(qmatmul(x, w, cfg) * dy)
+        return jnp.sum(mx_contract(x, w, cfg, kind="dense") * dy)
 
     gw = jax.grad(f)(w)
     xq = quantize_mx(x, E4M3, axis=0)     # blocks along tokens

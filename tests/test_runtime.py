@@ -1,0 +1,318 @@
+"""repro.runtime: journal bus, segment scheduler, memory ledgers, and the
+unified checkpoint-meta serializer.
+
+The tentpole invariants:
+
+  * Journal subclasses list — every pre-runtime consumer (indexing,
+    equality, iteration) keeps working — while validating records and
+    round-tripping JSONL losslessly;
+  * SegmentFn counts jit traces per static-arg key, so "a revisited qcfg
+    does not retrace" is assertable;
+  * plan_segments merges explicit phases and a *scheduled* guard policy
+    into one deterministic [(start, end, qcfg)] split;
+  * checkpoint_meta/parse_checkpoint_meta is the single serializer for
+    Trainer meta: qcfg + recovery count + guard controller state +
+    segment index survive a save/restore — including across mesh shapes
+    (meshless save → 1×1-mesh restore).
+"""
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import apply_intervention, preset
+from repro.runtime import (Journal, JsonlSink, MemoryBudgetError,
+                           MemoryLedger, MetricsWindow, RECORD_KINDS,
+                           Segment, SegmentFn, SegmentTracker,
+                           checkpoint_meta, parse_checkpoint_meta,
+                           plan_segments, read_jsonl, registry, tree_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Journal
+# ---------------------------------------------------------------------------
+def test_journal_is_a_list():
+    j = Journal()
+    j.append({"event": "run_start", "step": 0})
+    j.emit("recovery", step=4, reason="spike")
+    assert isinstance(j, list) and len(j) == 2
+    assert j[-1]["event"] == "recovery"
+    assert j == [{"event": "run_start", "step": 0},
+                 {"event": "recovery", "step": 4, "reason": "spike"}]
+    assert list(j) == j[:]  # iteration / slicing as plain records
+
+
+def test_journal_validates_records():
+    j = Journal()
+    with pytest.raises(TypeError):
+        j.append("not a dict")
+    with pytest.raises(ValueError):
+        j.append({"step": 3})          # no "event" kind
+    with pytest.raises(ValueError):
+        j.append({"event": ""})        # empty kind
+    # unknown kinds are forward-compatible by default...
+    j.emit("someday_a_new_kind", x=1)
+    # ...but strict journals pin to the registry
+    with pytest.raises(ValueError):
+        Journal(strict=True).emit("someday_a_new_kind")
+    Journal(strict=True).emit("segment", index=1, step=5)
+
+
+def test_journal_query_helpers():
+    j = Journal()
+    j.emit("segment", index=1, step=4)
+    j.emit("recovery", step=5)
+    j.emit("segment", index=2, step=8)
+    assert [r["index"] for r in j.of_kind("segment")] == [1, 2]
+    assert j.last("segment")["index"] == 2
+    assert j.last("straggler") is None
+    assert [r["event"] for r in j.replay()] == ["segment", "recovery",
+                                                "segment"]
+    assert len(list(j.replay("segment"))) == 2
+
+
+def test_journal_jsonl_round_trip(tmp_path):
+    j = Journal()
+    j.emit("run_start", step=0, qcfg="bf16")
+    j.emit("segment", index=1, step=7, reason="guard")
+    path = j.to_jsonl(str(tmp_path / "j.jsonl"))
+    assert Journal.from_jsonl(path) == j
+
+
+def test_journal_live_sink_mirrors_appends(tmp_path):
+    path = str(tmp_path / "live.jsonl")
+    j = Journal(sink=path)
+    j.emit("submit", rid=0)
+    j.emit("request_done", rid=0)
+    j.close()
+    assert [r["event"] for r in read_jsonl(path)] == ["submit",
+                                                      "request_done"]
+
+
+def test_read_jsonl_tolerates_blank_lines(tmp_path):
+    p = tmp_path / "x.jsonl"
+    p.write_text('{"event": "a"}\n\n{"event": "b"}\n')
+    assert [r["event"] for r in read_jsonl(str(p))] == ["a", "b"]
+
+
+def test_jsonl_sink_appends_across_instances(tmp_path):
+    path = str(tmp_path / "db.jsonl")
+    with JsonlSink(path) as s:
+        s.write({"run_id": "a"})
+    with JsonlSink(path) as s:   # reopen = append, the RunDB contract
+        s.write({"run_id": "b"})
+    assert [r["run_id"] for r in read_jsonl(path)] == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# SegmentFn trace accounting
+# ---------------------------------------------------------------------------
+def test_segmentfn_counts_traces_per_static_key():
+    f = SegmentFn(lambda x, mode: x * (2.0 if mode == "a" else 3.0),
+                  static_argnums=(1,), name="toy")
+    x = jnp.ones((4,))
+    f(x, "a")
+    f(x, "a")            # cache hit: same statics, same shapes
+    f(x, "b")            # new static key: one trace
+    f(x, "a")            # revisited key: still no retrace
+    assert f.calls == 4
+    assert f.n_traces == 2 and f.n_keys == 2
+    assert f.traces_for("a") == 1 and f.traces_for("b") == 1
+    assert f.traces_for("never") == 0
+    # a *shape* change is a legitimate retrace under the same static key
+    f(jnp.ones((8,)), "a")
+    assert f.traces_for("a") == 2
+    assert f in registry()
+    st = f.stats()
+    assert st["name"] == "toy" and st["calls"] == 5 and st["traces"] == 3
+
+
+def test_segmentfn_preserves_semantics():
+    f = SegmentFn(lambda x, k: x + k, static_argnums=(1,))
+    np.testing.assert_array_equal(np.asarray(f(jnp.arange(3.), 1.0)),
+                                  [1.0, 2.0, 3.0])
+
+
+# ---------------------------------------------------------------------------
+# plan_segments
+# ---------------------------------------------------------------------------
+def test_plan_segments_no_switches_is_one_segment():
+    q = preset("mxfp8_e4m3")
+    assert plan_segments(10, q) == [Segment(0, 10, q)]
+
+
+def test_plan_segments_phases_apply_cumulatively():
+    q = preset("mxfp8_e4m3")
+    segs = plan_segments(10, q, phases=((5, "bf16_activations"),))
+    assert [(s.start, s.end) for s in segs] == [(0, 5), (5, 10)]
+    assert segs[0].qcfg == q
+    assert segs[1].qcfg == apply_intervention(q, "bf16_activations")
+
+
+def test_plan_segments_merges_scheduled_guard():
+    q = preset("mxfp8_e4m3")
+    segs = plan_segments(12, q, guard="sched:4=bf16_activations,8=0")
+    assert [(s.start, s.end) for s in segs] == [(0, 4), (4, 8), (8, 12)]
+    assert segs[1].qcfg == apply_intervention(q, "bf16_activations")
+    assert segs[2].qcfg == q          # ladder level 0 = back to base
+    # online policies plan nothing (their switches are decided live)
+    assert plan_segments(12, q, guard="autopilot") == [Segment(0, 12, q)]
+
+
+def test_plan_segments_clips_out_of_range_switches():
+    q = preset("mxfp8_e4m3")
+    segs = plan_segments(10, q, phases=((50, "fp32"),))
+    assert segs == [Segment(0, 10, q)]
+
+
+# ---------------------------------------------------------------------------
+# SegmentTracker
+# ---------------------------------------------------------------------------
+def test_segment_tracker_journals_real_transitions_only():
+    q = preset("mxfp8_e4m3")
+    j = Journal()
+    t = SegmentTracker(q, journal=j)
+    assert not t.transition(3, q)                 # no-op: same scheme
+    assert t.index == 0 and not j
+    q2 = apply_intervention(q, "bf16_activations")
+    assert t.transition(7, q2, reason="guard")
+    assert t.index == 1
+    (rec,) = j.of_kind("segment")
+    assert rec["step"] == 7 and rec["reason"] == "guard"
+    assert rec["from_qcfg"] == q.describe()
+    assert rec["to_qcfg"] == q2.describe()
+    # restore re-enters a segment: adopts state, journals nothing
+    t.restore(5, q)
+    assert t.index == 5 and t.qcfg == q and len(j) == 1
+
+
+# ---------------------------------------------------------------------------
+# MetricsWindow
+# ---------------------------------------------------------------------------
+def test_metrics_window_drain():
+    w = MetricsWindow()
+    assert w.drain() == [] and not w
+    w.push(0, {"loss": jnp.float32(1.0)})
+    w.push(1, {"loss": jnp.float32(0.9)})
+    assert len(w) == 2
+    out = w.drain()
+    assert [s for s, _, _ in out] == [0, 1]
+    per = {t for _, _, t in out}
+    assert len(per) == 1 and per.pop() >= 0.0     # amortized window time
+    assert not w                                   # buffer cleared
+
+
+# ---------------------------------------------------------------------------
+# MemoryLedger
+# ---------------------------------------------------------------------------
+def test_tree_bytes_counts_leaves():
+    tree = {"a": jnp.ones((4, 8), jnp.float32),
+            "b": {"c": np.zeros(16, np.int8)}}
+    assert tree_bytes(tree) == 4 * 8 * 4 + 16
+
+
+def test_memory_ledger_accounting_and_budget():
+    j = Journal()
+    led = MemoryLedger(budget_bytes=100, journal=j, name="t")
+    led.account("params", nbytes=60)
+    led.account("opt", nbytes=30)
+    assert led.total == 90 and led.headroom == 10
+    assert "params" in led and led["params"] == 60
+    led.account("params", nbytes=50)     # rebind replaces, never adds
+    assert led.total == 80
+    with pytest.raises(MemoryBudgetError) as ei:
+        led.account("cache", nbytes=40)
+    assert "cache" in str(ei.value)      # the offender is named
+    assert led.release("cache") == 40
+    assert led.release("cache") == 0     # idempotent
+    assert led.report() == {"opt": 30, "params": 50, "total": 80}
+    ops = [(r["op"], r["entry"]) for r in j.of_kind("memory")]
+    assert ops == [("account", "params"), ("account", "opt"),
+                   ("account", "params"), ("account", "cache"),
+                   ("release", "cache")]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint meta (unit + Trainer round trip across mesh shapes)
+# ---------------------------------------------------------------------------
+def test_checkpoint_meta_round_trip_unit():
+    from repro.guard import PrecisionController, get_policy
+    q = preset("mxfp8_e4m3")
+    ctl = PrecisionController(q, get_policy("autopilot"))
+    meta = checkpoint_meta(step=42, qcfg=q, recoveries=2, controller=ctl,
+                           segment_index=3, extra={"note": "x"})
+    blob = json.loads(json.dumps(meta))   # survives the npz JSON sidecar
+    rm = parse_checkpoint_meta(blob)
+    assert rm.step == 42 and rm.recoveries == 2 and rm.segment_index == 3
+    assert rm.qcfg == q and rm.qcfg_describe == q.describe()
+    # JSON-normalized comparison: state_dict holds tuples, JSON lists
+    assert rm.guard == json.loads(json.dumps(ctl.state_dict()))
+    assert blob["note"] == "x"
+
+
+def test_parse_checkpoint_meta_tolerates_old_checkpoints():
+    rm = parse_checkpoint_meta(None)
+    assert rm.step is None and rm.qcfg is None and rm.recoveries is None
+    assert rm.guard is None and rm.segment_index == 0
+    rm = parse_checkpoint_meta({"step": 9})   # pre-qcfg-persistence meta
+    assert rm.step == 9 and rm.qcfg is None
+
+
+def _lm_trainer(ckpt_dir, mesh=None):
+    from repro.configs import get_config
+    from repro.data.synthetic import lm_input_arrays
+    from repro.models import lm_init, lm_loss
+    from repro.train import Trainer, TrainerConfig
+    cfg = get_config("olmo-paper", "smoke")
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    tcfg = TrainerConfig(total_steps=10, ckpt_dir=str(ckpt_dir),
+                         ckpt_every=10 ** 9, peak_lr=1e-3, log_every=1,
+                         guard="sched:1=bf16_activations",
+                         spike_factor=float("inf"),
+                         grad_factor=float("inf"))
+    return Trainer(loss_fn=lambda p, b, q: lm_loss(p, b, cfg, q),
+                   params=params, qcfg=preset("mxfp8_e4m3"),
+                   batch_fn=lambda s: lm_input_arrays(s, cfg, 2, 16),
+                   tcfg=tcfg, mesh=mesh)
+
+
+def test_trainer_meta_survives_restore_across_mesh_shapes(tmp_path):
+    """qcfg + recovery count + guard state + segment index round-trip
+    through checkpoint meta — written by a meshless trainer, restored by
+    a 1×1-mesh trainer (the elastic-checkpoint path)."""
+    from repro.launch.mesh import make_local_mesh
+    t1 = _lm_trainer(tmp_path)
+    t1.run(2)                      # scheduled switch at step 1
+    assert t1._segments.index == 1
+    assert t1.qcfg != preset("mxfp8_e4m3")
+    t1._recoveries = 2             # pretend two watchdog recoveries
+    t1.checkpoint()
+    t1._ckptr.wait()
+
+    t2 = _lm_trainer(tmp_path, mesh=make_local_mesh(1, 1))
+    with warnings.catch_warnings():
+        # t2 was constructed with the base scheme; adopting the
+        # checkpoint's intervened qcfg warns by design
+        warnings.simplefilter("ignore")
+        assert t2.restore()
+    assert t2.step == t1.step
+    assert t2.qcfg == t1.qcfg
+    assert t2._recoveries == 2
+    assert t2._segments.index == 1
+    assert json.loads(json.dumps(t2._controller.state_dict())) == \
+        json.loads(json.dumps(t1._controller.state_dict()))
+    assert t2.events.last("qcfg_restored") is not None
+    assert t2.events.last("guard_restored") is not None
+    # no spurious segment record: a restore re-enters the segment
+    assert t2.events.of_kind("segment") == []
+
+
+def test_record_kinds_cover_in_tree_emitters():
+    # the registry documents every kind the repo emits; spot-check the
+    # load-bearing ones so a rename cannot silently orphan consumers
+    for kind in ("run_start", "recovery", "segment", "snapshot_to_serve",
+                 "guard_transition", "sweep_run", "memory"):
+        assert kind in RECORD_KINDS

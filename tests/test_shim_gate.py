@@ -1,0 +1,46 @@
+"""Gate: no new in-tree callers of the deprecated contraction shims.
+
+``qmatmul`` / ``qeinsum_bmm`` / ``qdot_attn`` are deprecation shims over
+``mx_contract(kind=...)`` (PR 6); every internal caller has been migrated.
+This test is the enforcement: any new in-tree mention of a shim outside
+the allowlist (their definitions/exports and the tests that exercise the
+shims themselves) fails tier-1 and CI.
+"""
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+SHIMS = ("qmatmul", "qeinsum_bmm", "qdot_attn")
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
+ALLOWLIST = {
+    "src/repro/core/qlinear.py",    # the shim definitions
+    "src/repro/core/__init__.py",   # the public re-export
+    "tests/test_qlinear.py",        # *_shim_bit_identical_and_warns tests
+    "tests/test_shim_gate.py",      # this gate
+}
+
+
+def test_no_new_in_tree_shim_callers():
+    pat = re.compile(r"\b(" + "|".join(SHIMS) + r")\b")
+    offenders = []
+    for sub in SCAN_DIRS:
+        base = ROOT / sub
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            rel = p.relative_to(ROOT).as_posix()
+            if rel in ALLOWLIST:
+                continue
+            for i, line in enumerate(p.read_text().splitlines(), 1):
+                m = pat.search(line)
+                if m:
+                    offenders.append(f"{rel}:{i}: {m.group(1)}")
+    assert not offenders, (
+        "deprecated contraction shims referenced outside the allowlist "
+        "(use mx_contract(kind=...) instead):\n  " + "\n  ".join(offenders))
+
+
+def test_allowlist_entries_exist():
+    # a renamed/deleted file silently widening the gate is itself a bug
+    for rel in ALLOWLIST:
+        assert (ROOT / rel).is_file(), f"stale allowlist entry: {rel}"

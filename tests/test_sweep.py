@@ -51,6 +51,25 @@ def test_run_id_stable_and_distinct():
         json.dumps(a.to_dict()))).run_id == a.run_id
 
 
+def test_run_id_v2_ignores_defaulted_new_fields():
+    """run_id schema v2: only non-default fields are hashed, so a RunSpec
+    built from a *pre-guard-era* row dict (no guard/guard_probe_every keys
+    — those fields did not exist when the row was written) hashes
+    identically to the same spec with the new fields at their defaults.
+    Frozen literals pin the recipe itself: any change to the hash recipe
+    must bump RUN_ID_SCHEMA and update this test deliberately."""
+    from repro.sweep.spec import RUN_ID_SCHEMA
+    assert RUN_ID_SCHEMA == 2
+    new = RunSpec(scheme="mxfp4", lr=3e-3, seed=5, steps=200)
+    old_row = new.to_dict()
+    del old_row["guard"], old_row["guard_probe_every"]
+    assert RunSpec.from_dict(old_row).run_id == new.run_id
+    assert new.run_id == "ec329fb012b8f2af"
+    assert RunSpec().run_id == "b2f921674c929e8c"
+    # non-default values of the new fields still distinguish runs
+    assert dataclasses.replace(new, guard="autopilot").run_id != new.run_id
+
+
 def test_sweep_spec_json_round_trip():
     spec = SweepSpec.make(
         "s", dataclasses.replace(TINY, phases=((5, "fp32"),)),
